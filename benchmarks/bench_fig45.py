@@ -1,0 +1,35 @@
+"""Figs. 4-5 — accuracy / false-alarm / missed-detection vs SNR."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row
+from repro.core.precision_policy import Precision, PrecisionPolicy
+from repro.data import acoustic, features
+from repro.training import loop
+from repro.training.detector_artifact import get_detector
+
+SNRS = [-10, -5, 0, 5, 10, 15, 20]
+
+
+def main():
+    det = get_detector("mfcc20")
+    sweep = acoustic.make_snr_sweep(300, SNRS, seed=11)
+    for prec in (Precision.FP32, Precision.INT8):
+        pol = PrecisionPolicy.uniform(prec)
+        for snr in SNRS:
+            audio, labels = sweep[snr]
+            f = features.batch_features(audio, "mfcc20")
+            m = loop.evaluate_logits(
+                loop.predict(det["params"], f, det["cfg"], policy=pol), labels
+            )
+            row(
+                f"fig45/{prec.value}/snr_{snr:+d}dB",
+                "",
+                f"acc={m.accuracy*100:.2f}% FA={m.false_alarm_rate*100:.2f}% "
+                f"MD={m.missed_detection_rate*100:.2f}%",
+            )
+
+
+if __name__ == "__main__":
+    main()

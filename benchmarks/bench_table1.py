@@ -1,0 +1,27 @@
+"""Table I — dense-layer feature reduction and hardware benefits."""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import row
+from repro.core import timing_model as TM
+from repro.models import cnn1d
+
+
+def main():
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cnn1d.CANONICAL)
+    _, _, spec = cnn1d.prune_model(params, cnn1d.CANONICAL, keep=64, trim_frames=1)
+    row("table1/flatten_before", "", f"{spec.flatten_before} (paper: 35072)")
+    row("table1/flatten_after", "", f"{spec.flatten_after} (paper: 8704)")
+    row("table1/size_reduction", "", f"{spec.reduction*100:.1f}% (paper: 75%)")
+    dense_before = spec.flatten_before * cnn1d.CANONICAL.hidden
+    dense_after = spec.flatten_after * cnn1d.CANONICAL.hidden
+    row("table1/dense_macs", "", f"{dense_before} -> {dense_after} ({(1-dense_after/dense_before)*100:.1f}% lower)")
+    row("table1/serialized_cycles", "", f"{spec.flatten_before} -> {spec.flatten_after}")
+    lat_p = TM.shield8_latency(pruned=True)["seconds"] * 1e3
+    lat_u = TM.shield8_latency(pruned=False)["seconds"] * 1e3
+    row("table1/latency_ms", "", f"unpruned {lat_u:.1f} -> pruned {lat_p:.1f} (paper deployed: 116)")
+
+
+if __name__ == "__main__":
+    main()

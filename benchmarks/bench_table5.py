@@ -1,0 +1,34 @@
+"""Table V — 40 nm ASIC comparison (published points + our scaled row)."""
+from __future__ import annotations
+
+from benchmarks.common import row
+from repro.core import timing_model as TM
+
+
+def main():
+    for name, r in TM.PUBLISHED_ASIC.items():
+        tag = " (paper's synthesis)" if name == "Proposed" else " (published)"
+        row(
+            f"table5/{name.replace(' ', '_')}",
+            "",
+            f"f={r['freq_ghz']}GHz area={r['area_mm2']}mm2 P={r['power_w']}W{tag}",
+        )
+    # ASIC-speed inference: same cycle model at 1.56 GHz, no AXI staging
+    from repro.models.cnn1d import CANONICAL, layer_macs
+
+    lat = TM.latency_seconds(
+        layer_macs(CANONICAL, pruned_flatten=8704),
+        flatten_size=8704,
+        freq_hz=TM.ASIC_FREQ_HZ,
+        include_axi=False,
+    )
+    row(
+        "table5/asic_inference",
+        "",
+        f"{lat['seconds']*1e3:.2f} ms/inference @1.56GHz; "
+        f"E={TM.energy_joules(lat['seconds'], TM.ASIC_POWER_W)*1e3:.2f} mJ",
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,152 @@
+"""Roofline assembly: dry-run artifacts -> per-cell compute/memory/collective
+terms, dominant bottleneck, and MODEL_FLOPS utilisation ratio.
+
+Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16 (394 TOP/s int8),
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Conventions (documented in EXPERIMENTS.md):
+* FLOPs/bytes come from the *cost* variant (fully unrolled — nothing hidden
+  in while bodies).  SSM/RWKV time-scan recurrence FLOPs are invisible to
+  XLA there; an analytic correction term is added (formula below).
+* collective bytes are per-chip post-SPMD shapes, all-reduce counted 2x
+  (ring), and the term assumes one active ICI link per chip (conservative;
+  a 2D-torus axis pair would halve it).
+* memory term uses cost-variant 'bytes accessed' (XLA's HBM traffic upper
+  bound: every op's operands+outputs, fusion-aware).
+* MODEL_FLOPS = 6*N*D train / 2*N*D prefill (N = params, active for MoE;
+  D = tokens processed; decode D = batch).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import get_config
+from repro.launch.specs import SHAPES
+
+PEAK_FLOPS = 197e12
+PEAK_HBM = 819e9
+PEAK_ICI = 50e9
+CHIPS = {"pod_16x16": 256, "multipod_2x16x16": 512}
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def recurrence_flops_correction(arch: str, shape_name: str) -> float:
+    """Analytic FLOPs of SSM/RWKV time-scan bodies (global, full batch).
+
+    rwkv6:  per step/layer ~ 4*B*H*N^2   (decay*S, k^T v, r·S, u-bonus)
+    mamba2: per step/layer ~ 6*B*H*N*P   (decay*S, dt*B x, C^T S)
+    Decode steps have T=1 and are already visible to XLA (no loop).
+    """
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if shape.kind == "decode":
+        return 0.0
+    t = shape.seq_len
+    b = shape.global_batch
+    total = 0.0
+    for kind in cfg.pattern:
+        if kind == "rwkv6":
+            h = cfg.d_model // cfg.rwkv_head_dim
+            n = cfg.rwkv_head_dim
+            total += 4.0 * b * t * h * n * n * cfg.n_groups
+        elif kind == "mamba2":
+            d_in = cfg.ssm_expand * cfg.d_model
+            h = d_in // cfg.ssm_head_dim
+            total += 6.0 * b * t * h * cfg.ssm_state * cfg.ssm_head_dim * cfg.n_groups
+    if shape.kind == "train":
+        total *= 3.0  # fwd + bwd
+    return total
+
+
+def model_flops(rec: dict, shape_name: str) -> float:
+    shape = SHAPES[shape_name]
+    n = rec.get("n_params_active") or rec.get("n_params")
+    if shape.kind == "train":
+        d = shape.seq_len * shape.global_batch
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.seq_len * shape.global_batch
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence
+
+
+def cell_roofline(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = CHIPS[rec["mesh"]]
+    cost = rec["variants"].get("cost", {})
+    fit = rec["variants"].get("fit", {})
+    if "error" in cost or "flops_per_device" not in cost:
+        cost = fit  # fall back (flagged)
+    if "error" in cost:
+        return None
+    corr = recurrence_flops_correction(rec["arch"], rec["shape"]) / chips
+    flops_dev = (cost["flops_per_device"] or 0.0) + corr
+    bytes_dev = cost["bytes_accessed"] if "bytes_accessed" in cost else cost["bytes_per_device"]
+    coll_dev = cost["collectives"]["total_bytes"]
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = (bytes_dev or 0.0) / PEAK_HBM
+    t_coll = coll_dev / PEAK_ICI
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec, rec["shape"])
+    ratio = mf / (flops_dev * chips) if flops_dev else 0.0
+    bound = max(terms.values())
+    fit_mem = fit.get("memory", {})
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_ratio": ratio,
+        "recurrence_corr_global": corr * chips,
+        "roofline_fraction": (mf / PEAK_FLOPS / chips) / bound if bound else 0.0,
+        "tpu_peak_gb": fit_mem.get("tpu_peak_bytes_est", 0) / 1e9,
+        "fits_16gb": fit_mem.get("tpu_peak_bytes_est", 1e18) < 16e9,
+        "tag": rec.get("tag", ""),
+    }
+
+
+def load_cells(out_dir: Path = ARTIFACTS, tag: str = "", mesh: str = "pod_16x16") -> list[dict]:
+    """Roofline cells (single-pod by default — the §Roofline convention)."""
+    cells = []
+    for p in sorted(out_dir.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag", "") != tag:
+            continue
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if "cost" not in rec.get("variants", {}):
+            continue
+        r = cell_roofline(rec)
+        if r:
+            cells.append(r)
+    return cells
+
+
+def main():
+    from benchmarks.common import row
+
+    cells = load_cells()
+    for c in cells:
+        row(
+            f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}",
+            "",
+            f"compute={c['t_compute_s']*1e3:.2f}ms memory={c['t_memory_s']*1e3:.2f}ms "
+            f"collective={c['t_collective_s']*1e3:.2f}ms dominant={c['dominant']} "
+            f"useful={c['useful_ratio']*100:.1f}% roofline_frac={c['roofline_fraction']*100:.1f}% "
+            f"fit={c['tpu_peak_gb']:.1f}GB",
+        )
+    if not cells:
+        row("roofline/none", "", "no dry-run artifacts found — run repro.launch.dryrun first")
+
+
+if __name__ == "__main__":
+    main()

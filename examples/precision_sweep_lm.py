@@ -1,0 +1,46 @@
+"""Beyond-paper: the precision-aware technique applied to an assigned LM.
+
+Quantises a reduced gemma-2b per the structural sensitivity policy
+(embeddings/norms pinned, projections int8), verifies output agreement vs
+full precision, and reports the weight-byte reduction that drives the
+roofline memory/collective terms at scale.
+
+    PYTHONPATH=src python examples/precision_sweep_lm.py
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as T
+from repro.models.quantized import default_lm_policy, quantize_lm_params, quantized_fraction
+
+
+def main():
+    cfg = get_config("gemma-2b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0, cfg.vocab)}
+
+    base = T.forward(params, batch, cfg)
+    policy = default_lm_policy(cfg)
+    qparams = quantize_lm_params(params, policy)
+    quant = T.forward(qparams, batch, cfg)
+
+    base_p = jax.nn.softmax(base, axis=-1)
+    quant_p = jax.nn.softmax(quant, axis=-1)
+    tvd = float(0.5 * jnp.abs(base_p - quant_p).sum(-1).mean())
+    agree = float(jnp.mean(jnp.argmax(base, -1) == jnp.argmax(quant, -1)))
+    frac = quantized_fraction(qparams)
+    print(f"quantised int8 weight fraction : {frac*100:.1f}% of parameter elements")
+    print(f"top-1 agreement fp32 vs W8     : {agree*100:.1f}%")
+    print(f"mean TV distance               : {tvd:.4f}")
+    # random-init logits are near-uniform, so argmax agreement is a noisy
+    # metric at smoke scale; 0.8 catches real divergence (trained detectors
+    # are held to <2.5pp accuracy in benchmarks/bench_table2).
+    assert agree > 0.8, "int8 weight-only quantisation diverged"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""End-to-end LM training driver example (~100M-param class, CPU-scaled).
+
+Exercises the full production loop — sharded params, grad-accumulation train
+step, prefetching loader, checkpoint/restart, preemption hook — on a reduced
+OLMoE-style MoE (the paper's quantisation/pruning targets generalised to an
+assigned arch).  The loss must fall; the script asserts it.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 60
+    # full driver (any assigned arch):
+    PYTHONPATH=src python -m repro.launch.train --arch olmoe-1b-7b --smoke --steps 200
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+from repro.launch.train import main as train_main
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=60)
+    ap.add_argument("--arch", default="olmoe-1b-7b")
+    ap.add_argument("--scale", type=float, default=2.0, help="width multiplier (2.0 ~ 5M params; raise toward 100M off-container)")
+    args = ap.parse_args()
+
+    losses = train_main(
+        [
+            "--arch", args.arch,
+            "--smoke",
+            "--scale", str(args.scale),
+            "--steps", str(args.steps),
+            "--batch", "8",
+            "--seq", "128",
+            "--lr", "2e-3",
+            "--warmup", "5",
+            "--ckpt-every", "25",
+            "--ckpt-dir", "artifacts/ckpt_example",
+        ]
+    )
+    first, last = losses[0], float(np.mean(losses[-10:]))
+    assert last < first * 0.8, f"loss did not fall: {first:.3f} -> {last:.3f}"
+    print(f"OK: loss fell {first:.3f} -> {last:.3f}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Generate the data-driven tables of EXPERIMENTS.md from artifacts/.
+
+Usage: PYTHONPATH=src python scripts/gen_experiments.py
+Writes markdown fragments under artifacts/fragments/ which EXPERIMENTS.md
+includes verbatim (regenerate after new dry-runs/hillclimbs).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+from benchmarks.roofline import cell_roofline  # noqa: E402
+
+ROOT = Path(__file__).resolve().parents[1]
+DRY = ROOT / "artifacts" / "dryrun"
+FRAG = ROOT / "artifacts" / "fragments"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+ARCH_ORDER = [
+    "phi3.5-moe-42b-a6.6b", "olmoe-1b-7b", "phi4-mini-3.8b", "gemma3-12b",
+    "h2o-danube-3-4b", "gemma-2b", "rwkv6-7b", "zamba2-7b", "hubert-xlarge",
+    "internvl2-1b",
+]
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.2f}GB" if b >= 1e8 else f"{b/1e6:.1f}MB"
+
+
+def fmt_t(t):
+    return f"{t*1e3:.2f}" if t is not None else "-"
+
+
+def load(tag=""):
+    recs = {}
+    for p in sorted(DRY.glob("*.json")):
+        r = json.loads(p.read_text())
+        if r.get("tag", "") != tag:
+            continue
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def dryrun_table(recs) -> str:
+    lines = [
+        "| arch | shape | mesh | status | compile fit/cost (s) | per-dev FLOPs (cost) | coll bytes/chip | fit peak (TPU est) |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod_16x16", "multipod_2x16x16"):
+                r = recs.get((arch, shape, mesh))
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | |")
+                    continue
+                if r["status"] == "skip":
+                    lines.append(f"| {arch} | {shape} | {mesh} | skip: {r['reason'][:42]} | | | | |")
+                    continue
+                fit = r["variants"].get("fit", {})
+                cost = r["variants"].get("cost", {})
+                if "error" in fit or "error" in cost:
+                    err = (fit.get("error") or cost.get("error", ""))[:60]
+                    lines.append(f"| {arch} | {shape} | {mesh} | ERROR {err} | | | | |")
+                    continue
+                peak = fit.get("memory", {}).get("tpu_peak_bytes_est")
+                fits = "✓" if peak is not None and peak < 16e9 else "✗"
+                has_cost = "compile_s" in cost
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | ok | {fit.get('compile_s','-')}/{cost.get('compile_s','-')} "
+                    f"| {cost['flops_per_device']:.2e} | {fmt_bytes(cost['collectives']['total_bytes'])} "
+                    if has_cost
+                    else f"| {arch} | {shape} | {mesh} | ok (fit-only) | {fit.get('compile_s','-')}/- | - | - "
+                )
+                lines[-1] += f"| {fmt_bytes(peak)} {fits} |"
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="pod_16x16") -> str:
+    lines = [
+        "| arch | shape | compute (ms) | memory (ms) | collective (ms) | dominant | useful % | roofline frac % | fits 16GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if not r or r.get("status") != "ok":
+                continue
+            c = cell_roofline(r)
+            if not c:
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {fmt_t(c['t_compute_s'])} | {fmt_t(c['t_memory_s'])} "
+                f"| {fmt_t(c['t_collective_s'])} | **{c['dominant']}** "
+                f"| {c['useful_ratio']*100:.1f} | {c['roofline_fraction']*100:.1f} "
+                f"| {'✓' if c['fits_16gb'] else '✗'} ({c['tpu_peak_gb']:.1f}GB) |"
+            )
+    return "\n".join(lines)
+
+
+def main():
+    FRAG.mkdir(parents=True, exist_ok=True)
+    recs = load()
+    (FRAG / "dryrun_table.md").write_text(dryrun_table(recs))
+    (FRAG / "roofline_table.md").write_text(roofline_table(recs))
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skip")
+    n_err = len(recs) - n_ok - n_skip
+    print(f"fragments written: {n_ok} ok, {n_skip} skip, {n_err} err, {len(recs)} total cells")
+
+
+if __name__ == "__main__":
+    main()

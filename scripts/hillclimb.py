@@ -1,0 +1,53 @@
+"""Perf hillclimb driver: lower tagged variants of the three target cells and
+record roofline deltas vs baseline.
+
+Targets (selection in EXPERIMENTS.md §4.1):
+  olmoe-1b-7b  x train_4k     — worst useful-FLOPs ratio (MoE dispatch)
+  rwkv6-7b     x prefill_32k  — most collective-bound
+  gemma-2b     x train_4k     — paper-technique representative (quant + embed)
+
+Usage: PYTHONPATH=src python scripts/hillclimb.py [--only <tag>]
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse  # noqa: E402
+import sys  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+VARIANTS = [
+    # (arch, shape, tag, kwargs)
+    ("olmoe-1b-7b", "train_4k", "a2a",
+     dict(cfg_overrides={"moe_impl": "a2a"})),
+    ("olmoe-1b-7b", "train_4k", "a2a_int8",
+     dict(cfg_overrides={"moe_impl": "a2a"}, quantize=True)),
+    ("rwkv6-7b", "prefill_32k", "residfix",
+     dict()),  # code-level change: per-head GroupNorm + constrained WKV scan
+    ("rwkv6-7b", "prefill_32k", "residfix_int8",
+     dict(quantize=True)),
+    ("gemma-2b", "train_4k", "shembed",
+     dict(cfg_overrides={"sharded_embed_gather": True})),
+    ("gemma-2b", "train_4k", "shembed_int8",
+     dict(cfg_overrides={"sharded_embed_gather": True}, quantize=True)),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    ap.add_argument("--variants", default="cost")
+    args = ap.parse_args()
+    for arch, shape, tag, kw in VARIANTS:
+        if args.only and args.only != tag:
+            continue
+        print(f"\n##### {arch} x {shape} [{tag}] #####")
+        run_cell(arch, shape, False, variants=tuple(args.variants.split(",")), tag=tag, **kw)
+
+
+if __name__ == "__main__":
+    main()

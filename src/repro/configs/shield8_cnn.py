@@ -1,0 +1,4 @@
+"""The paper's own model: the canonical 1D-F-CNN deployment config."""
+from repro.models.cnn1d import CNNConfig
+
+CONFIG = CNNConfig()  # M=1096, (64,128,256) channels, flatten 35,072

@@ -1,0 +1,132 @@
+"""Per-layer precision policy — the software face of the multi-precision datapath.
+
+The POLARON accelerator's "configuration prefetcher interprets layer metadata
+and updates execution parameters at runtime"; here that metadata is a
+``PrecisionPolicy``: a mapping from parameter-tree paths (glob-style) to
+``Precision`` modes.  Model code asks the policy which mode a given matmul
+runs in and dispatches to the matching arithmetic:
+
+* FP32  — plain fp32 einsum
+* BF16  — bf16 cast (MXU-native)
+* INT8  — W8A8 via the Pallas quant_matmul kernel (int32 accumulate)
+* FXP8  — as INT8 but power-of-two scales (shift dequant)
+
+Policies serialise to/from plain dicts so they ride along in configs and
+checkpoints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+import json
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import (
+    Precision,
+    QTensor,
+    activation_quantize,
+    bf16_round,
+    fxp8_quantize,
+    int8_symmetric,
+    quantize_tensor,
+)
+
+
+@dataclasses.dataclass
+class PrecisionPolicy:
+    """Glob-pattern → Precision mapping with a default mode."""
+
+    rules: dict[str, Precision] = dataclasses.field(default_factory=dict)
+    default: Precision = Precision.FP32
+
+    def precision_for(self, path: str) -> Precision:
+        best = None
+        best_len = -1
+        for pat, prec in self.rules.items():
+            if fnmatch.fnmatch(path, pat) and len(pat) > best_len:
+                best, best_len = prec, len(pat)
+        return best if best is not None else self.default
+
+    @staticmethod
+    def uniform(precision: Precision) -> "PrecisionPolicy":
+        return PrecisionPolicy(rules={}, default=precision)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"default": self.default.value, "rules": {k: v.value for k, v in self.rules.items()}}
+        )
+
+    @staticmethod
+    def from_json(s: str) -> "PrecisionPolicy":
+        d = json.loads(s)
+        return PrecisionPolicy(
+            rules={k: Precision(v) for k, v in d["rules"].items()},
+            default=Precision(d["default"]),
+        )
+
+    @staticmethod
+    def from_sensitivity(scores: Mapping[str, float], **kw) -> "PrecisionPolicy":
+        from repro.core.sensitivity import assign_precisions
+
+        return PrecisionPolicy(rules=dict(assign_precisions(scores, **kw)))
+
+
+def fake_quant_params(params, policy: PrecisionPolicy, prefix: str = ""):
+    """Emulation path: fake-quantise every weight tensor per the policy.
+
+    Biases / 1-D tensors ride at fp32 (they live in the extended-precision
+    accumulator in hardware).
+    """
+
+    def walk(tree, path):
+        if isinstance(tree, Mapping):
+            return type(tree)({k: walk(v, f"{path}/{k}" if path else k) for k, v in tree.items()})
+        if tree.ndim < 2:
+            return tree
+        return quantize_tensor(tree, policy.precision_for(path))
+
+    return walk(params, prefix)
+
+
+def policy_einsum(
+    spec: str,
+    x: jax.Array,
+    w: jax.Array,
+    precision: Precision,
+    *,
+    use_kernel: bool = False,
+    act_alpha: float = 6.0,
+) -> jax.Array:
+    """A precision-dispatched einsum — the shared datapath's MAC bank.
+
+    With ``use_kernel=True`` the 8-bit modes run the real Pallas W8A8 kernel
+    (only for 2-D matmul specs); otherwise they run the fake-quant emulation
+    (exact same numerics the kernel implements, validated in tests).
+    """
+    if precision == Precision.FP32:
+        return jnp.einsum(spec, x, w, precision=jax.lax.Precision.HIGHEST)
+    if precision == Precision.BF16:
+        return jnp.einsum(
+            spec, bf16_round(x).astype(jnp.bfloat16), w.astype(jnp.bfloat16)
+        ).astype(jnp.float32)
+    # 8-bit modes: quantise weights per output channel, activations per tensor.
+    quant = int8_symmetric if precision == Precision.INT8 else fxp8_quantize
+    wq: QTensor = quant(w, axis=w.ndim - 1)
+    if use_kernel and spec in ("mk,kn->mn", "bk,kn->bn"):
+        from repro.kernels import ops as kops
+
+        xq = quant(x, axis=None)
+        return kops.quant_matmul(xq.q, wq.q, xq.scale, wq.scale.reshape(1, -1))
+    xf = activation_quantize(x, precision, act_alpha)
+    return jnp.einsum(spec, xf, wq.dequantize())
+
+
+__all__ = [
+    "Precision",
+    "PrecisionPolicy",
+    "fake_quant_params",
+    "policy_einsum",
+]

@@ -1,0 +1,109 @@
+"""Serialisation-aware structured channel pruning (SHIELD8-UAV §III-C, Table I).
+
+In the paper's sequential accelerator the flatten→dense interface is the
+latency bottleneck: the flattened feature vector is streamed element-by-
+element (PISO) through the shared datapath, so dense-layer cycles ==
+flattened size.  Structured channel pruning *before the flatten* cuts that
+dimension 35,072 → 8,704 (75 %), directly cutting serialised cycles.
+
+On TPU there is no PISO serialisation; the same transform instead cuts the
+dense layer's FLOPs and bytes by 75 % — the pruning objective is retargeted
+at the dominant roofline term (see DESIGN.md §2).  The transform itself is
+reproduced exactly: channel importance by L1 norm, top-K channel keep, mask
+propagation into the consumer dense layer, plus the boundary-frame trim that
+yields the paper's exact 8,704.
+
+Generic FFN-channel pruning for the LM stacks lives here too
+(``prune_ffn``), using the same importance rule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PruneSpec:
+    """Result of planning a structured channel prune."""
+
+    keep_channels: np.ndarray  # sorted indices of surviving channels
+    keep_frames: np.ndarray  # surviving spatial frames (boundary trim)
+    flatten_before: int
+    flatten_after: int
+
+    @property
+    def reduction(self) -> float:
+        return 1.0 - self.flatten_after / self.flatten_before
+
+
+def channel_importance(w_conv: jax.Array) -> jax.Array:
+    """L1-norm importance of each output channel of a conv kernel.
+
+    ``w_conv`` has layout (kernel, in_ch, out_ch) — the lax.conv 1D layout
+    used throughout the model code.
+    """
+    return jnp.sum(jnp.abs(w_conv), axis=(0, 1))
+
+
+def plan_prune(
+    w_conv: jax.Array,
+    n_frames: int,
+    *,
+    keep: int,
+    trim_frames: int = 0,
+) -> PruneSpec:
+    """Plan a structured prune of the final conv block feeding the flatten.
+
+    keep=64, trim_frames=1 on the paper's (frames=137, ch=256) feature map
+    reproduces Table I exactly: 137*256 = 35,072 → 136*64 = 8,704.
+    The frame trim removes the final boundary frame (conv zero-padding
+    artefact at the right edge) — cheap to remove, never informative.
+    """
+    imp = np.asarray(channel_importance(w_conv))
+    order = np.argsort(imp)[::-1]
+    keep_ch = np.sort(order[:keep])
+    keep_fr = np.arange(n_frames - trim_frames)
+    n_ch = w_conv.shape[-1]
+    return PruneSpec(
+        keep_channels=keep_ch,
+        keep_frames=keep_fr,
+        flatten_before=n_frames * n_ch,
+        flatten_after=len(keep_fr) * keep,
+    )
+
+
+def apply_prune_conv(w_conv: jax.Array, b_conv: jax.Array, spec: PruneSpec):
+    """Slice the producing conv's output channels."""
+    return w_conv[:, :, spec.keep_channels], b_conv[spec.keep_channels]
+
+
+def apply_prune_dense(w_dense: jax.Array, spec: PruneSpec, n_frames: int, n_ch: int):
+    """Propagate the prune into the consumer dense layer.
+
+    The flatten order is (frames, channels) row-major; rows of ``w_dense``
+    (shape: flatten × out) corresponding to pruned channels/frames are
+    dropped.
+    """
+    w = w_dense.reshape(n_frames, n_ch, -1)
+    w = w[np.ix_(spec.keep_frames, spec.keep_channels)]
+    return w.reshape(spec.flatten_after, -1)
+
+
+def prune_ffn(
+    w_in: jax.Array, w_out: jax.Array, *, keep: int
+) -> tuple[jax.Array, jax.Array, np.ndarray]:
+    """Structured hidden-channel prune of a dense FFN (LM generalisation).
+
+    ``w_in``: (d_model, d_ff), ``w_out``: (d_ff, d_model).  Importance of a
+    hidden channel is ||w_in[:, c]||_1 * ||w_out[c, :]||_1 (flow through the
+    channel).  Returns sliced weights + kept indices.
+    """
+    imp = np.asarray(
+        jnp.sum(jnp.abs(w_in), axis=0) * jnp.sum(jnp.abs(w_out), axis=1)
+    )
+    keep_idx = np.sort(np.argsort(imp)[::-1][:keep])
+    return w_in[:, keep_idx], w_out[keep_idx, :], keep_idx

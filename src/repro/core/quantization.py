@@ -1,0 +1,248 @@
+"""Precision-aware quantisation (SHIELD8-UAV §III-B).
+
+Implements the paper's four numeric modes — FP32, BF16, INT8, FXP8 — plus the
+PwQ weight quantiser (eqs. 4-6) and PACT activation quantiser (eqs. 7-8).
+
+Two layers of machinery live here:
+
+* *Emulation* quantisers (``pwq_quantize``, ``pact``, ``quantize_tensor``)
+  that return fake-quantised fp32 tensors.  These reproduce the paper's
+  "Python-based arithmetic emulation model ... prior to RTL realisation"
+  and drive the accuracy tables.
+* *Deployment* quantisers (``int8_symmetric``, ``fxp8_quantize``) that return
+  actual int8 payloads + scales, consumed by the Pallas ``quant_matmul``
+  kernel (the multi-precision MAC bank analogue).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Precision(str, enum.Enum):
+    """Numeric modes supported by the shared multi-precision datapath."""
+
+    FP32 = "fp32"
+    BF16 = "bf16"
+    INT8 = "int8"
+    FXP8 = "fxp8"
+
+    @property
+    def bits(self) -> int:
+        return {"fp32": 32, "bf16": 16, "int8": 8, "fxp8": 8}[self.value]
+
+    @property
+    def is_integer(self) -> bool:
+        return self in (Precision.INT8, Precision.FXP8)
+
+
+# ---------------------------------------------------------------------------
+# PwQ weight quantisation (paper eqs. 4-6)
+# ---------------------------------------------------------------------------
+
+
+def pwq_scale(w: jax.Array, n_bits: int) -> jax.Array:
+    """Paper eq. (4):  scale(k) = mean(|W|) * (2^n - 1) / 2^(n-1)."""
+    n = n_bits
+    return jnp.mean(jnp.abs(w)) * (2.0**n - 1.0) / (2.0 ** (n - 1))
+
+
+def default_clip_bounds(w: jax.Array, n_bits: int) -> tuple[jax.Array, jax.Array]:
+    """Initial (W_l, W_h) clipping bounds for PwQ.
+
+    The paper *learns* these; the learned values are initialised from the
+    normalised weight range, which is what we use when no learned bounds are
+    supplied.  Bounds live in the ``W / scale(k)`` domain (see eq. 5).
+    """
+    k = pwq_scale(w, n_bits)
+    k = jnp.where(k == 0, 1.0, k)
+    wn = w / k
+    return jnp.min(wn), jnp.max(wn)
+
+
+def pwq_quantize(
+    w: jax.Array,
+    n_bits: int,
+    w_l: Optional[jax.Array] = None,
+    w_h: Optional[jax.Array] = None,
+) -> jax.Array:
+    """PwQ fake-quantise ``w`` to ``n_bits`` (paper eqs. 4-6), returns fp32.
+
+    eq. (5):  Ŵ = round((clip(W/k, W_l, W_h) - W_l) * (2^n-1)/(W_h-W_l))
+    eq. (6):  Q(W) = Ŵ * (W_h-W_l)/(2^n-1) + W_l        (then re-scaled by k)
+    """
+    w = w.astype(jnp.float32)
+    k = pwq_scale(w, n_bits)
+    k = jnp.where(k == 0, 1.0, k)
+    if w_l is None or w_h is None:
+        d_l, d_h = default_clip_bounds(w, n_bits)
+        w_l = d_l if w_l is None else w_l
+        w_h = d_h if w_h is None else w_h
+    span = jnp.maximum(w_h - w_l, 1e-12)
+    levels = 2.0**n_bits - 1.0
+    w_hat = jnp.round((jnp.clip(w / k, w_l, w_h) - w_l) * levels / span)
+    q = w_hat * span / levels + w_l
+    # eq. (6) reconstructs in the normalised domain; undo the eq. (4) scale so
+    # Q(W) ≈ W (the paper folds this into the datapath's scale-and-shift unit).
+    return (q * k).astype(jnp.float32)
+
+
+def pwq_error(w: jax.Array, n_bits: int) -> jax.Array:
+    """||Q^PwQ(w) - w||_2 — the building block of the sensitivity score."""
+    return jnp.linalg.norm(pwq_quantize(w, n_bits) - w)
+
+
+# ---------------------------------------------------------------------------
+# PACT activation quantisation (paper eqs. 7-8)
+# ---------------------------------------------------------------------------
+
+
+def pact(x: jax.Array, alpha: jax.Array) -> jax.Array:
+    """Paper eq. (7):  y = 0.5 (|x| - |x - α| + α)  ==  clip(x, 0, α)."""
+    return 0.5 * (jnp.abs(x) - jnp.abs(x - alpha) + alpha)
+
+
+def pact_quantize(x: jax.Array, alpha: jax.Array, n_bits: int) -> jax.Array:
+    """Paper eq. (8): quantise the PACT-clipped activation to n_bits (fp32 out)."""
+    y = pact(x, alpha)
+    levels = 2.0**n_bits - 1.0
+    a = jnp.maximum(alpha, 1e-12)
+    return jnp.round(y * levels / a) * a / levels
+
+
+@jax.custom_vjp
+def pact_ste(x: jax.Array, alpha: jax.Array, n_bits: int) -> jax.Array:
+    return pact_quantize(x, alpha, n_bits)
+
+
+def _pact_ste_fwd(x, alpha, n_bits):
+    return pact_quantize(x, alpha, n_bits), (x, alpha)
+
+
+def _pact_ste_bwd(res, g):
+    x, alpha = res
+    # Straight-through for x inside [0, α]; PACT's dα = 1{x >= α} (CACP rule).
+    in_range = jnp.logical_and(x >= 0, x <= alpha)
+    dx = jnp.where(in_range, g, 0.0)
+    dalpha = jnp.sum(jnp.where(x >= alpha, g, 0.0))
+    return dx, dalpha.reshape(jnp.shape(alpha)), None
+
+
+pact_ste.defvjp(_pact_ste_fwd, _pact_ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Deployment quantisers (real int8 payloads for the Pallas MAC-bank kernel)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class QTensor:
+    """An int8 tensor + dequantisation scale (per-channel on ``axis``)."""
+
+    q: jax.Array  # int8 payload
+    scale: jax.Array  # fp32, broadcastable against q
+    axis: Optional[int] = None  # channel axis the scale follows (None = per-tensor)
+
+    @property
+    def shape(self):
+        return self.q.shape
+
+    def dequantize(self) -> jax.Array:
+        return self.q.astype(jnp.float32) * self.scale
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda t: ((t.q, t.scale), t.axis),
+    lambda axis, kids: QTensor(kids[0], kids[1], axis),
+)
+
+
+def int8_symmetric(w: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """Symmetric int8 quantisation with fp32 per-channel scale (INT8 mode)."""
+    w = w.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        red = tuple(i for i in range(w.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, axis=axis)
+
+
+def int8_symmetric_keep(w: jax.Array, keep_axes: tuple[int, ...]) -> QTensor:
+    """Symmetric int8 with scales kept along ``keep_axes`` (e.g. the stacked
+    layer axis 0 *and* the output-channel axis -1 for scanned weights)."""
+    w = w.astype(jnp.float32)
+    keep = {a % w.ndim for a in keep_axes}
+    red = tuple(i for i in range(w.ndim) if i not in keep)
+    amax = jnp.max(jnp.abs(w), axis=red, keepdims=True) if red else jnp.abs(w)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, axis=max(keep))
+
+
+def fxp8_quantize(w: jax.Array, axis: Optional[int] = None) -> QTensor:
+    """FXP8: fixed-point Q1.(7-m) — the scale is constrained to a power of two.
+
+    This is the hardware-friendly mode (dequant = arithmetic shift).  The
+    power-of-two constraint loses up to 1 bit of headroom vs INT8, matching
+    the paper's observed FXP8 ≲ INT8 accuracy ordering.
+    """
+    w = w.astype(jnp.float32)
+    if axis is None:
+        amax = jnp.max(jnp.abs(w))
+    else:
+        red = tuple(i for i in range(w.ndim) if i != axis)
+        amax = jnp.max(jnp.abs(w), axis=red, keepdims=True)
+    amax = jnp.maximum(amax, 1e-12)
+    # smallest power-of-two scale s = 2^e with 127*s >= amax
+    e = jnp.ceil(jnp.log2(amax / 127.0))
+    scale = jnp.exp2(e)
+    q = jnp.clip(jnp.round(w / scale), -128, 127).astype(jnp.int8)
+    return QTensor(q=q, scale=scale, axis=axis)
+
+
+def bf16_round(x: jax.Array) -> jax.Array:
+    """BF16 mode: true round-trip through bfloat16 (mantissa truncation)."""
+    return x.astype(jnp.bfloat16).astype(jnp.float32)
+
+
+def quantize_tensor(w: jax.Array, precision: Precision, axis: Optional[int] = None) -> jax.Array:
+    """Fake-quantise ``w`` under ``precision`` (fp32 in, fp32 out).
+
+    This is the emulation path used to score accuracy (Table II).  INT8 uses
+    PwQ (the paper's weight quantiser); FXP8 uses the power-of-two-scale
+    variant.
+    """
+    if precision == Precision.FP32:
+        return w.astype(jnp.float32)
+    if precision == Precision.BF16:
+        return bf16_round(w)
+    if precision == Precision.INT8:
+        return pwq_quantize(w, 8)
+    if precision == Precision.FXP8:
+        return fxp8_quantize(w, axis=axis).dequantize()
+    raise ValueError(f"unknown precision {precision}")
+
+
+def activation_quantize(x: jax.Array, precision: Precision, alpha: jax.Array | float = 6.0) -> jax.Array:
+    """Quantise activations under ``precision`` (PACT for the 8-bit modes)."""
+    if precision == Precision.FP32:
+        return x
+    if precision == Precision.BF16:
+        return bf16_round(x)
+    alpha = jnp.asarray(alpha, jnp.float32)
+    return pact_ste(x, alpha, 8)
+
+
+def quantization_mse(w: jax.Array, precision: Precision) -> float:
+    """Mean-squared emulation error of a tensor under a precision mode."""
+    return float(jnp.mean((quantize_tensor(w, precision) - w) ** 2))

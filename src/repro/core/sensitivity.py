@@ -1,0 +1,94 @@
+"""Layer-sensitivity-driven precision assignment (SHIELD8-UAV §III-B, eqs. 2-3).
+
+For each layer ``l`` the paper scores quantisation sensitivity as
+
+    s_{l,sc,k} = ( ||Q(w_l) - w_l|| - ||Q_{sc,k}(w_l) - w_l|| ) * ||∇L_{w_l}|| / n_l
+    s_l        = max(s_{l,sc,16}, s_{l,sc,8})                                  (3)
+
+where ``Q`` is the default (8-bit) PwQ quantiser and ``Q_{sc,k}`` the
+scale-corrected k-bit variant: the score measures how much error a *better*
+quantiser removes, weighted by the loss gradient — layers where extra
+precision buys a lot of gradient-weighted error reduction are *sensitive*
+and get FP32/BF16; the rest run INT8/FXP8.
+
+The same machinery drives the LM-framework precision policies: embeddings,
+routers, and decay/dt parameters naturally score high and stay
+high-precision, matmul-heavy FFN/attention projections score low and drop
+to int8.
+"""
+from __future__ import annotations
+
+from typing import Callable, Mapping
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import Precision, pwq_error
+
+
+def layer_sensitivity(w: jax.Array, grad: jax.Array) -> jax.Array:
+    """Paper eqs. (2)-(3) for one layer's weight tensor + loss gradient."""
+    w = w.astype(jnp.float32)
+    n_l = w.size
+    gnorm = jnp.linalg.norm(grad.astype(jnp.float32))
+    base = pwq_error(w, 8)  # Q^PwQ default = 8-bit
+    s_16 = (base - pwq_error(w, 16)) * gnorm / n_l
+    s_8 = (base - pwq_error(w, 8)) * gnorm / n_l  # == 0 by construction; kept per eq. (3)
+    return jnp.maximum(s_16, s_8)
+
+
+def sensitivity_scores(
+    params: Mapping[str, jax.Array], grads: Mapping[str, jax.Array]
+) -> dict[str, float]:
+    """Score every weight tensor in a flat {name: tensor} mapping."""
+    out: dict[str, float] = {}
+    for name, w in params.items():
+        if w.ndim < 2:  # biases/scales: always high precision, not scored
+            continue
+        out[name] = float(layer_sensitivity(w, grads[name]))
+    return out
+
+
+def assign_precisions(
+    scores: Mapping[str, float],
+    *,
+    high_fraction: float = 0.25,
+    low_precision: Precision = Precision.INT8,
+    high_precision: Precision = Precision.BF16,
+    pinned: Mapping[str, Precision] | None = None,
+) -> dict[str, Precision]:
+    """Rank layers by sensitivity; the top ``high_fraction`` stay high precision.
+
+    ``pinned`` overrides (e.g. first/last layer pinned FP32, MoE routers
+    pinned BF16) are applied after ranking — mirroring the paper's practice
+    of keeping boundary layers at full precision.
+    """
+    if not scores:
+        return dict(pinned or {})
+    names = sorted(scores, key=lambda n: scores[n], reverse=True)
+    n_high = max(1, int(round(high_fraction * len(names)))) if high_fraction > 0 else 0
+    policy = {}
+    for i, name in enumerate(names):
+        policy[name] = high_precision if i < n_high else low_precision
+    if pinned:
+        policy.update(pinned)
+    return policy
+
+
+def score_with_loss(
+    loss_fn: Callable[[Mapping[str, jax.Array]], jax.Array],
+    params: Mapping[str, jax.Array],
+) -> dict[str, float]:
+    """Convenience: compute grads of ``loss_fn`` and score in one shot."""
+    grads = jax.grad(loss_fn)(params)
+    flat_p = dict(_flatten(params))
+    flat_g = dict(_flatten(grads))
+    return sensitivity_scores(flat_p, flat_g)
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, Mapping):
+        for k, v in tree.items():
+            yield from _flatten(v, f"{prefix}{k}/" if prefix or True else k)
+    else:
+        yield prefix.rstrip("/"), tree

@@ -1,0 +1,73 @@
+"""Sequential shared-datapath execution — the TPU analogue of POLARON layer reuse.
+
+The paper's accelerator compiles *one* datapath and streams every layer
+through it ("reusable sequential layer-execution ... eliminating datapath
+replication").  The XLA-native equivalent is ``jax.lax.scan`` over
+layer-stacked parameters: one compiled layer body, reused L times, with
+weights streamed in per iteration.  Benefits mirror the hardware ones —
+program size and compile time drop from O(L) to O(1), and the weights-
+stationary discipline is explicit.
+
+Heterogeneous stacks (gemma3's 5-local:1-global groups, zamba2's
+mamba/mamba/shared-attn periods) scan over the repeating *pattern* instead:
+the scanned body contains one instance of each member of the period.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def stack_layers(layer_params: list[Any]):
+    """Stack a list of identical pytrees along a new leading 'layer' axis."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs, axis=0), *layer_params)
+
+
+def unstack_layers(stacked: Any, n: int) -> list[Any]:
+    return [jax.tree_util.tree_map(lambda x, i=i: x[i], stacked) for i in range(n)]
+
+
+def scan_layers(
+    body: Callable[[Any, Any], Any],
+    stacked_params: Any,
+    x: Any,
+    *,
+    unroll: int = 1,
+    remat: bool = False,
+    policy: Callable | None = None,
+) -> Any:
+    """Run ``x`` through L layers sequentially on the shared compiled body.
+
+    ``body(layer_params, x) -> x`` is the one-layer program (the datapath).
+    ``remat=True`` wraps the body in activation rematerialisation — the
+    memory/compute knob used by the train-step's checkpoint policy.
+    """
+    fn = body
+    if remat:
+        fn = jax.checkpoint(body, policy=policy)
+
+    def step(carry, layer):
+        return fn(layer, carry), None
+
+    out, _ = jax.lax.scan(step, x, stacked_params, unroll=unroll)
+    return out
+
+
+def scan_layers_with_aux(
+    body: Callable[[Any, Any], tuple[Any, Any]],
+    stacked_params: Any,
+    x: Any,
+    *,
+    remat: bool = False,
+) -> tuple[Any, Any]:
+    """Like scan_layers but the body also emits a per-layer aux output
+    (e.g. MoE load-balance stats, per-layer KV cache slices)."""
+    fn = jax.checkpoint(body) if remat else body
+
+    def step(carry, layer):
+        new_carry, aux = fn(layer, carry)
+        return new_carry, aux
+
+    return jax.lax.scan(step, x, stacked_params)

@@ -1,0 +1,163 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code names tensor dimensions with *logical* axes ("batch", "heads",
+"mlp", ...).  A ``ShardingRules`` table maps logical axes onto mesh axes;
+``logical_to_spec`` resolves a logical shape to a ``PartitionSpec``, dropping
+any mesh axis that does not evenly divide the dimension (the fallback is
+replication, recorded in ``FALLBACKS`` so the dry-run can report it — e.g.
+gemma-2b's kv_heads=1 can never shard over a 16-way model axis).
+
+Activations are constrained in-graph via ``constrain`` which reads an
+ambient context (set by the launcher); with no context it is a no-op, so the
+same model code runs on 1 CPU device and on the 512-chip production mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of mesh axes)
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "decode_batch": ("pod", "data"),
+    "seq": (),  # replicated by default; long-context rules shard it
+    "kv_seq": (),
+    # decode KV caches when kv_heads cannot use the model axis (MQA/GQA with
+    # few kv heads): shard the *sequence* dim over model instead — softmax
+    # combines with a tiny per-step collective (ring-decode attention).
+    "kv_seq_model": ("model",),
+    "embed": (),
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_capacity": (),
+    "ssm_heads": ("model",),
+    "ssm_state": (),
+    "conv_kernel": (),
+    "layers": (),
+    "frontend": (),
+    "classes": ("model",),
+}
+
+#: long-context serving rules: shard the KV/sequence axis over "data"
+#: (ring-attention style cache partitioning) since decode batch is tiny.
+LONG_CONTEXT_OVERRIDES = {
+    "kv_seq": ("data",),
+    "kv_seq_model": ("data", "model"),
+    "decode_batch": ("pod",),
+}
+
+
+class ShardingRules:
+    def __init__(self, mesh: Mesh, rules: Optional[dict] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES)
+        if rules:
+            self.rules.update(rules)
+        self.fallbacks: list[tuple[str, int, str]] = []  # (logical, size, reason)
+
+    def mesh_axes_for(self, logical: Optional[str]) -> tuple[str, ...]:
+        if logical is None:
+            return ()
+        axes = self.rules.get(logical, ())
+        return tuple(a for a in axes if a in self.mesh.axis_names)
+
+    def spec(self, logical_shape: Sequence[Optional[str]], dims: Optional[Sequence[int]] = None) -> P:
+        """Resolve logical axis names (+ optional dim sizes for divisibility).
+
+        A mesh axis may shard at most one dimension of a tensor: earlier
+        dimensions win (e.g. MoE expert weights ("experts","embed","mlp")
+        give the model axis to "experts"; "mlp" falls back to replicated).
+        Non-divisible mappings also fall back; both are logged.
+        """
+        parts = []
+        used: set[str] = set()
+        for i, name in enumerate(logical_shape):
+            axes = self.mesh_axes_for(name)
+            kept = []
+            total = 1
+            for a in axes:
+                if a in used:
+                    self.fallbacks.append((name or "?", -1, f"{a} already used in tensor"))
+                    continue
+                n = self.mesh.shape[a]
+                if dims is not None:
+                    size = dims[i]
+                    if size % (total * n) != 0:
+                        self.fallbacks.append((name or "?", size, f"{a}={n} !| {size}"))
+                        continue
+                kept.append(a)
+                total *= n
+            used.update(kept)
+            if not kept:
+                parts.append(None)
+            elif len(kept) == 1:
+                parts.append(kept[0])
+            else:
+                parts.append(tuple(kept))
+        return P(*parts)
+
+    def sharding(self, logical_shape, dims=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical_shape, dims))
+
+
+_ACTIVE = threading.local()
+
+
+def active_rules() -> Optional[ShardingRules]:
+    return getattr(_ACTIVE, "rules", None)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[ShardingRules]):
+    prev = getattr(_ACTIVE, "rules", None)
+    _ACTIVE.rules = rules
+    try:
+        yield rules
+    finally:
+        _ACTIVE.rules = prev
+
+
+def kv_seq_axis(n_kv_heads: int) -> str:
+    """Logical axis for KV-cache sequence dims: "kv_seq_model" when the kv
+    heads cannot occupy the model axis (must match the launcher's choice in
+    launch/specs.py, or resharding all-gathers appear around every cache)."""
+    rules = active_rules()
+    if rules is None:
+        return "kv_seq"
+    msize = dict(rules.mesh.shape).get("model", 1)
+    return "kv_seq" if n_kv_heads % msize == 0 else "kv_seq_model"
+
+
+def constrain(x: jax.Array, logical_shape: Sequence[Optional[str]]) -> jax.Array:
+    """Annotate an activation with its logical sharding (no-op off-mesh)."""
+    rules = active_rules()
+    if rules is None:
+        return x
+    spec = rules.spec(logical_shape, dims=x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+def is_logical_leaf(t) -> bool:
+    return isinstance(t, tuple) and all(isinstance(i, (str, type(None))) for i in t)
+
+
+def tree_shardings(rules: ShardingRules, abstract_tree, logical_tree):
+    """Build a NamedSharding pytree for params: ``logical_tree`` mirrors the
+    abstract param tree, with tuples of logical axis names at the leaves.
+
+    Mapped over ``logical_tree`` first (its tuple leaves would otherwise be
+    traversed as pytree nodes)."""
+    return jax.tree_util.tree_map(
+        lambda logical, aval: rules.sharding(logical, dims=aval.shape),
+        logical_tree,
+        abstract_tree,
+        is_leaf=is_logical_leaf,
+    )

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: CORDIC-based activation unit (POLARON's AF stage).
+
+The accelerator computes activations with a CORDIC unit ("a CORDIC-based
+activation unit supporting Swish, SoftMax, SeLU, GELU, Sigmoid, Tanh and
+ReLU").  CORDIC is a shift-add hardware algorithm: hyperbolic rotation-mode
+iterations produce (cosh z, sinh z) from which tanh/sigmoid/exp derive.
+
+TPU adaptation (DESIGN.md §2): the shift-add iteration is kept *bit-faithful*
+in int32 fixed point (Q15.16) inside VREG ops — `x >> i` etc. — so the kernel
+reproduces the numerics the RTL unit would produce, not merely the math.  On
+a real TPU one would use the VPU's transcendental ops instead; this kernel
+exists to (a) emulate accelerator-exact activation numerics for the accuracy
+tables and (b) demonstrate the hardware algorithm as a Pallas program.
+
+Hyperbolic CORDIC needs iterations {1..N} with 4 and 13 repeated to converge
+(|z| <= ~1.118); exp uses base-2 range reduction, tanh uses the doubling
+identity once (tanh convergence domain then covers |x| <= ~2.23, saturating
+beyond), and the other activations derive from those two primitives.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+F = 16  # fraction bits (Q15.16)
+ONE = 1 << F
+LN2 = float(np.log(2.0))
+
+# hyperbolic iteration schedule: 1..18 with 4 and 13 repeated
+_ITERS = [1, 2, 3, 4, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 13, 14, 15, 16, 17, 18]
+_ATANH_TABLE = np.array(
+    [round(float(np.arctanh(2.0**-i)) * ONE) for i in _ITERS], np.int32
+)
+_GAIN = float(np.prod([np.sqrt(1.0 - 2.0 ** (-2 * i)) for i in _ITERS]))
+_X0 = round(ONE / _GAIN)  # pre-scaled so x converges to cosh, y to sinh
+
+MODES = ("tanh", "sigmoid", "exp", "swish", "gelu", "selu", "relu")
+
+_SELU_ALPHA = 1.6732632423543772
+_SELU_SCALE = 1.0507009873554805
+
+
+def _cordic_sinh_cosh(z_fx: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Rotation-mode hyperbolic CORDIC on Q15.16 ints.
+
+    Returns (cosh, sinh) in Q15.16.  Valid for |z| <= ~1.118.
+    """
+    x = jnp.full_like(z_fx, _X0)
+    y = jnp.zeros_like(z_fx)
+    z = z_fx
+
+    # Unrolled shift-add iterations with *static* shift amounts and angle
+    # constants — exactly how the RTL unit is built (one stage per iteration).
+    for shift, e in zip(_ITERS, (int(v) for v in _ATANH_TABLE)):
+        d_pos = z >= 0
+        xs = jax.lax.shift_right_arithmetic(x, shift)
+        ys = jax.lax.shift_right_arithmetic(y, shift)
+        x, y, z = (
+            jnp.where(d_pos, x + ys, x - ys),
+            jnp.where(d_pos, y + xs, y - xs),
+            jnp.where(d_pos, z - e, z + e),
+        )
+    return x, y
+
+
+def _fx(v: jax.Array) -> jax.Array:
+    """fp32 -> Q15.16 (round to nearest)."""
+    return jnp.round(v * ONE).astype(jnp.int32)
+
+
+def _fl(v: jax.Array) -> jax.Array:
+    """Q15.16 -> fp32."""
+    return v.astype(jnp.float32) / ONE
+
+
+def _exp_core(v: jax.Array) -> jax.Array:
+    """exp(v) via base-2 range reduction + CORDIC exp(r) = cosh r + sinh r."""
+    v = jnp.clip(v, -30.0, 30.0)
+    k = jnp.round(v / LN2)
+    r = v - k * LN2  # |r| <= ln2/2 = 0.3466 < 1.118  (convergence domain)
+    c, s = _cordic_sinh_cosh(_fx(r))
+    return _fl(c + s) * jnp.exp2(k)
+
+
+def _tanh_core(v: jax.Array) -> jax.Array:
+    """tanh via two doublings: tanh(2a) = 2 t / (1 + t^2), a = v/4.
+
+    |a| = |v|/4 <= 1.1 keeps the CORDIC in its convergence domain for
+    |v| <= 4.4; beyond that tanh saturates to +-1 (|tanh(4.4)| = 0.99967,
+    within Q15.16 LSB of 1).
+    """
+    a = jnp.clip(v, -4.4, 4.4) * 0.25
+    c, s = _cordic_sinh_cosh(_fx(a))
+    t = s.astype(jnp.float32) / jnp.maximum(c.astype(jnp.float32), 1.0)
+    t = 2.0 * t / (1.0 + t * t)
+    t = 2.0 * t / (1.0 + t * t)
+    return jnp.where(jnp.abs(v) >= 4.4, jnp.sign(v), t)
+
+
+def _apply_mode(v: jax.Array, mode: str) -> jax.Array:
+    if mode == "tanh":
+        return _tanh_core(v)
+    if mode == "sigmoid":
+        return 0.5 * (1.0 + _tanh_core(0.5 * v))
+    if mode == "exp":
+        return _exp_core(v)
+    if mode == "swish":
+        return v * (0.5 * (1.0 + _tanh_core(0.5 * v)))
+    if mode == "gelu":
+        inner = 0.7978845608028654 * (v + 0.044715 * v**3)
+        return 0.5 * v * (1.0 + _tanh_core(inner))
+    if mode == "selu":
+        neg = _SELU_ALPHA * (_exp_core(jnp.minimum(v, 0.0)) - 1.0)
+        return _SELU_SCALE * jnp.where(v > 0, v, neg)
+    if mode == "relu":
+        return jnp.maximum(v, 0.0)
+    raise ValueError(f"unknown CORDIC mode {mode!r}")
+
+
+def _kernel(x_ref, o_ref, *, mode: str):
+    o_ref[...] = _apply_mode(x_ref[...].astype(jnp.float32), mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block", "interpret"))
+def cordic_activation(
+    x: jax.Array,
+    mode: str = "tanh",
+    *,
+    block: tuple[int, int] = (256, 128),
+    interpret: bool = True,
+) -> jax.Array:
+    """Elementwise CORDIC activation over an arbitrary-shape fp32 tensor."""
+    assert mode in MODES, mode
+    shape = x.shape
+    flat = x.reshape(-1)
+    bm, bn = block
+    n = flat.shape[0]
+    cols = bn
+    rows = _rup(max(1, (n + cols - 1) // cols), bm)
+    pad = rows * cols - n
+    grid_in = jnp.pad(flat, (0, pad)).reshape(rows, cols)
+    out = pl.pallas_call(
+        functools.partial(_kernel, mode=mode),
+        grid=(rows // bm,),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, cols), jnp.float32),
+        interpret=interpret,
+    )(grid_in)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def cordic_softmax(x: jax.Array, axis: int = -1, interpret: bool = True) -> jax.Array:
+    """Softmax with CORDIC exponentials (max-subtracted for stability)."""
+    m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
+    e = cordic_activation(x - m, "exp", interpret=interpret)
+    return e / jnp.sum(e, axis=axis, keepdims=True)
+
+
+def _rup(x: int, b: int) -> int:
+    return (x + b - 1) // b * b

@@ -1,0 +1,56 @@
+"""jit'd public wrappers over the Pallas kernels.
+
+``conv1d_q`` lowers the 1D convolution onto the quant_matmul kernel via
+im2col — convolution and dense layers literally share one MAC datapath,
+which is the paper's central architectural idea ("mapping convolutional and
+dense layers onto a shared compute fabric").
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import QTensor, fxp8_quantize, int8_symmetric
+from repro.kernels.cordic_act import cordic_activation, cordic_softmax  # noqa: F401
+from repro.kernels.quant_matmul import quant_matmul  # noqa: F401
+
+
+def quant_matmul_f32(
+    x: jax.Array, w: jax.Array, *, fxp: bool = False, interpret: bool = True
+) -> jax.Array:
+    """Quantise fp32 operands (per-tensor act, per-column weight) and multiply
+    on the W8A8 kernel."""
+    quant = fxp8_quantize if fxp else int8_symmetric
+    xq: QTensor = quant(x, axis=None)
+    wq: QTensor = quant(w, axis=1)
+    return quant_matmul(
+        xq.q, wq.q, xq.scale.reshape(1, 1), wq.scale.reshape(1, -1), interpret=interpret
+    )
+
+
+def _im2col(x: jax.Array, k: int) -> jax.Array:
+    """(B, L, C) -> (B*L, k*C) patches under 'same' zero padding."""
+    b, l, c = x.shape
+    pad = (k - 1) // 2
+    xp = jnp.pad(x, ((0, 0), (pad, k - 1 - pad), (0, 0)))
+    cols = jnp.stack([xp[:, i : i + l, :] for i in range(k)], axis=2)  # (B, L, k, C)
+    return cols.reshape(b * l, k * c)
+
+
+def conv1d_q(
+    x: jax.Array,  # (B, L, Cin) fp32
+    w: jax.Array,  # (K, Cin, Cout) fp32
+    b: jax.Array | None = None,
+    *,
+    fxp: bool = False,
+    interpret: bool = True,
+) -> jax.Array:
+    """Quantised 'same' 1D convolution on the shared matmul datapath."""
+    bsz, l, cin = x.shape
+    k, cin2, cout = w.shape
+    assert cin == cin2
+    patches = _im2col(x, k)  # (B*L, K*Cin)
+    wmat = w.reshape(k * cin, cout)
+    out = quant_matmul_f32(patches, wmat, fxp=fxp, interpret=interpret)
+    out = out.reshape(bsz, l, cout)
+    return out if b is None else out + b

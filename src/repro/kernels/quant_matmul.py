@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: W8A8 quantised matmul with int32 extended accumulation.
+
+This is the TPU mapping of POLARON's multi-precision MAC bank: int8 operands
+stream through the MXU, partial sums accumulate in an int32 VMEM scratch
+("extended-precision accumulators maintain numerical stability"), and the
+final scale-and-shift/dequant happens once per output tile (the accelerator's
+"normalisation, scale-and-shift" stage).
+
+Grid is (M/bm, N/bn, K/bk) with K innermost so each (m, n) output tile keeps
+its accumulator resident in VMEM across the K loop (weights-stationary within
+a tile, exactly the shared-datapath reuse discipline).  Tile sides are
+multiples of 128 to align with the 128x128 MXU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.int32
+    )
+
+    @pl.when(k == pl.num_programs(2) - 1)
+    def _dequant():
+        o_ref[...] = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def quant_matmul(
+    x_q: jax.Array,  # (M, K) int8
+    w_q: jax.Array,  # (K, N) int8
+    x_scale: jax.Array,  # (M, 1) or (1, 1) fp32
+    w_scale: jax.Array,  # (1, N) or (1, 1) fp32
+    *,
+    bm: int = 128,
+    bn: int = 128,
+    bk: int = 128,
+    interpret: bool = True,  # CPU container: interpret mode; False on real TPU
+) -> jax.Array:
+    """Dequantised fp32 product of int8 operands; pads to tile multiples."""
+    m, k = x_q.shape
+    k2, n = w_q.shape
+    assert k == k2, (x_q.shape, w_q.shape)
+    mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
+    x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
+    w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
+    xs = jnp.broadcast_to(x_scale.astype(jnp.float32), (m, 1))
+    xs = jnp.pad(xs, ((0, mp - m), (0, 0)), constant_values=1.0)
+    ws = jnp.broadcast_to(w_scale.astype(jnp.float32), (1, n))
+    ws = jnp.pad(ws, ((0, 0), (0, np_ - n)), constant_values=1.0)
+
+    out = pl.pallas_call(
+        _kernel,
+        grid=(mp // bm, np_ // bn, kp // bk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=interpret,
+    )(x_q, w_q, xs, ws)
+    return out[:m, :n]
+
+
+def _rup(x: int, b: int) -> int:
+    return (x + b - 1) // b * b

@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel's tests sweep shapes/dtypes and assert_allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quant_matmul_ref(x_q, w_q, x_scale, w_scale) -> jax.Array:
+    """int8 x int8 -> int32 accumulate -> fp32 dequant."""
+    acc = jnp.matmul(
+        x_q.astype(jnp.int32), w_q.astype(jnp.int32)
+    )
+    return acc.astype(jnp.float32) * x_scale.astype(jnp.float32) * w_scale.astype(jnp.float32)
+
+
+def tanh_ref(x):
+    return jnp.tanh(x)
+
+
+def sigmoid_ref(x):
+    return jax.nn.sigmoid(x)
+
+
+def exp_ref(x):
+    return jnp.exp(jnp.clip(x, -30.0, 30.0))
+
+
+def swish_ref(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu_ref(x):
+    # tanh-approximation GELU (the form the CORDIC unit implements)
+    return 0.5 * x * (1.0 + jnp.tanh(0.7978845608028654 * (x + 0.044715 * x**3)))
+
+
+def selu_ref(x):
+    return jax.nn.selu(x)
+
+
+def relu_ref(x):
+    return jax.nn.relu(x)
+
+
+def softmax_ref(x, axis=-1):
+    return jax.nn.softmax(x, axis=axis)
+
+
+ACT_REFS = {
+    "tanh": tanh_ref,
+    "sigmoid": sigmoid_ref,
+    "exp": exp_ref,
+    "swish": swish_ref,
+    "gelu": gelu_ref,
+    "selu": selu_ref,
+    "relu": relu_ref,
+}
+
+
+def conv1d_q_ref(x, w, b=None):
+    """fp32 'same'-padded 1D conv oracle, (B, L, Cin) x (K, Cin, Cout)."""
+    out = jax.lax.conv_general_dilated(
+        x, w, (1,), "SAME", dimension_numbers=("NWC", "WIO", "NWC")
+    )
+    return out if b is None else out + b

@@ -1,0 +1,374 @@
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (architecture x input-shape x mesh) cell
+lowers, compiles, and fits — and harvest the roofline terms.
+
+The two lines above MUST stay the first statements in this module (before
+any jax import): jax locks the device count at first init.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma-2b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only-train]
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape train_4k --mesh both
+
+Each cell writes artifacts/dryrun/<arch>__<shape>__<mesh>.json with
+memory_analysis, cost_analysis, and per-op collective traffic.
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+from pathlib import Path  # noqa: E402
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ALIASES, get_config, lm_arch_names  # noqa: E402
+from repro.configs.base import ArchConfig  # noqa: E402
+from repro.distributed.sharding import (  # noqa: E402
+    LONG_CONTEXT_OVERRIDES,
+    ShardingRules,
+    tree_shardings,
+    use_rules,
+)
+from repro.launch import hlo_analysis  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import SHAPES, ShapeSpec, batch_specs, cache_specs, skip_reason  # noqa: E402
+from repro.models import transformer as T  # noqa: E402
+from repro.training.lm import TrainSettings, make_decode_step, make_train_step  # noqa: E402
+from repro.training.lm import make_encoder_step, make_prefill_step  # noqa: E402
+from repro.training.optimizer import Adam  # noqa: E402
+
+ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _with_sharding(tree, shardings):
+    return jax.tree_util.tree_map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh), tree, shardings
+    )
+
+
+def _sharded_tree(rules: ShardingRules, abstract, logical):
+    return _with_sharding(abstract, tree_shardings(rules, abstract, logical))
+
+
+def build_cell(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    rules: ShardingRules,
+    n_micro: int,
+    *,
+    quantize: bool = False,
+):
+    """Returns (fn, example_args) ready for jit().lower(*args)."""
+    aparams = T.abstract_params(cfg)
+    logical = T.logical_axes(cfg)
+    if quantize:
+        from repro.models.quantized import abstract_quantized, default_lm_policy
+
+        aparams, logical = abstract_quantized(aparams, logical, default_lm_policy(cfg))
+    params = _sharded_tree(rules, aparams, logical)
+    bspecs, blogical = batch_specs(cfg, shape)
+    batch = {
+        k: jax.ShapeDtypeStruct(
+            v.shape, v.dtype, sharding=rules.sharding(blogical[k], dims=v.shape)
+        )
+        for k, v in bspecs.items()
+    }
+    if shape.kind == "train":
+        opt = Adam(lr=1e-4)
+        moment = lambda: jax.tree_util.tree_map(
+            lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding), params
+        )
+        from repro.training.optimizer import AdamState
+
+        opt_state = AdamState(
+            step=jax.ShapeDtypeStruct((), jnp.int32), mu=moment(), nu=moment()
+        )
+        step = make_train_step(cfg, opt, TrainSettings(n_micro=n_micro))
+        return step, (params, opt_state, batch)
+    if shape.kind == "prefill":
+        if cfg.is_encoder:
+            return make_encoder_step(cfg), (params, batch)
+        fn = make_prefill_step(cfg, max_seq=shape.seq_len)
+        return fn, (params, batch)
+    # decode
+    acache, clogical = cache_specs(cfg, shape, model_axis_size=rules.mesh.shape["model"])
+    caches = _sharded_tree(rules, acache, clogical)
+    fn = make_decode_step(cfg, max_seq=shape.seq_len)
+    token = batch["token"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    return fn, (params, token, caches, pos)
+
+
+def _loop_factors(cfg: ArchConfig, shape: ShapeSpec, stack_mode: str, n_micro: int):
+    """Trip counts by while-loop nesting depth (see hlo_analysis).
+
+    fit variant (scan):   train  [n_micro, n_groups]
+                          prefill [n_groups]
+                          decode  [n_groups]
+    cost variant (unroll, n_micro=1, unroll_attn): no layer/micro loops left;
+    remaining loops (SSM/RWKV time scans) carry no collectives — anything
+    found there is reported unattributed with factor 1.
+    """
+    if stack_mode != "scan":
+        return []
+    if shape.kind == "train":
+        return [float(n_micro), float(cfg.n_groups)]
+    return [float(cfg.n_groups)]
+
+
+def _run_variant(
+    cfg: ArchConfig,
+    shape: ShapeSpec,
+    mesh,
+    rules: ShardingRules,
+    n_micro: int,
+    *,
+    quantize: bool = False,
+) -> dict:
+    t0 = time.time()
+    fn, args = build_cell(cfg, shape, rules, n_micro, quantize=quantize)
+    # donation: train updates (params, opt_state) in place; decode updates the
+    # KV caches in place — exactly as the real launcher runs them.
+    donate = {"train": (0, 1), "prefill": (), "decode": (2,)}[shape.kind]
+    with mesh, use_rules(rules):
+        lowered = jax.jit(fn, donate_argnums=donate).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    ma = compiled.memory_analysis()
+    print(ma)
+    ca = compiled.cost_analysis()
+    print({k: ca.get(k) for k in ("flops", "bytes accessed")})
+    hlo = compiled.as_text()
+    factors = _loop_factors(cfg, shape, cfg.stack_mode, n_micro)
+    coll = hlo_analysis.collective_bytes(hlo, loop_factors=factors)
+    return {
+        "stack_mode": cfg.stack_mode,
+        "n_micro": n_micro if shape.kind == "train" else None,
+        "loop_factors": factors,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops_per_device": ca.get("flops"),
+        "bytes_per_device": ca.get("bytes accessed"),
+        "collectives": coll,
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes
+            + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "hlo_chars": len(hlo),
+    }
+
+
+def run_cell(
+    arch: str,
+    shape_name: str,
+    multi_pod: bool,
+    *,
+    n_micro: int = 8,
+    variants: tuple[str, ...] = ("fit", "cost"),
+    rules_overrides: dict | None = None,
+    cfg_overrides: dict | None = None,
+    quantize: bool = False,
+    tag: str = "",
+    out_dir: Path = ARTIFACTS,
+    verbose: bool = True,
+) -> dict:
+    """One (arch x shape x mesh) cell.  Two lowering variants:
+
+    * fit  — stack_mode=scan (+grad-accum): honest *memory* feasibility.
+      XLA:CPU's latency-oriented scheduler hoists unrolled/remat blocks, so
+      only the scanned form reflects a memory-aware TPU schedule.
+    * cost — stack_mode=unroll, n_micro=1, attention chunks unrolled: exact
+      HLO FLOP/collective totals (nothing hidden inside while bodies).
+    """
+    shape = SHAPES[shape_name]
+    base_cfg = get_config(arch)
+    if cfg_overrides:
+        base_cfg = base_cfg.replace(**cfg_overrides)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    reason = skip_reason(base_cfg, shape)
+    if reason:
+        rec.update(status="skip", reason=reason)
+        _write(rec, out_dir)
+        if verbose:
+            print(f"[skip] {arch} x {shape_name} x {mesh_name}: {reason}")
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(rules_overrides or {})
+    if shape.name == "long_500k":
+        overrides = {**LONG_CONTEXT_OVERRIDES, **overrides}
+    rec["n_params"] = T.param_count(base_cfg)
+    rec["n_params_active"] = T.active_param_count(base_cfg)
+    rec["variants"] = {}
+    status = "ok"
+    for variant in variants:
+        rules = ShardingRules(mesh, overrides)
+        if variant == "cost" and base_cfg.n_layers > 60:
+            # Deep stacks (zamba2: 81 blocks) make the fully-unrolled compile
+            # pathological on XLA:CPU.  Per-layer costs are exactly linear in
+            # depth, so compile 1-group and 2-group models and extrapolate:
+            # per_group = v2 - v1;  total = (v1 - per_group) + n_groups*per_group.
+            try:
+                rec["variants"]["cost"] = _extrapolated_cost(
+                    base_cfg, shape, mesh, ShardingRules(mesh, overrides),
+                    ShardingRules(mesh, overrides), quantize
+                )
+                if verbose:
+                    v = rec["variants"]["cost"]
+                    print(
+                        f"[ok:cost*] {arch} x {shape_name} x {mesh_name} extrapolated "
+                        f"flops/dev={v['flops_per_device']:.3e} "
+                        f"coll={v['collectives']['total_bytes']:.3e}B"
+                    )
+            except Exception as e:  # noqa: BLE001
+                status = "error"
+                rec["variants"]["cost"] = {
+                    "error": f"{type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-4000:],
+                }
+            continue
+        if variant == "fit":
+            # all-f32 lowering: XLA:CPU upcasts bf16 operands to hoisted f32
+            # copies (no native bf16 compute), which double-counts memory a
+            # TPU would never allocate.  Lowering uniformly in f32 makes
+            # every buffer exactly 2x its TPU-bf16 size; the recorded
+            # tpu_peak_bytes_est is raw/2 (fp32-native buffers — norms,
+            # router, SSM states — are conservatively halved too; they are
+            # <1% of the total).
+            cfg = base_cfg.replace(
+                stack_mode="scan", param_dtype="float32", act_dtype="float32"
+            )
+            nm = n_micro
+        else:
+            cfg = base_cfg.replace(stack_mode="unroll", unroll_attn=True, remat=False)
+            nm = 1
+        try:
+            v = _run_variant(cfg, shape, mesh, rules, nm, quantize=quantize)
+            v["fallbacks"] = sorted(set(map(tuple, rules.fallbacks)))
+            if variant == "fit":
+                v["memory"]["tpu_peak_bytes_est"] = v["memory"]["peak_bytes_est"] / 2
+            rec["variants"][variant] = v
+            if verbose:
+                peak = v["memory"].get("tpu_peak_bytes_est", v["memory"]["peak_bytes_est"])
+                print(
+                    f"[ok:{variant}] {arch} x {shape_name} x {mesh_name} "
+                    f"compile={v['compile_s']}s flops/dev={v['flops_per_device']:.3e} "
+                    f"coll={v['collectives']['total_bytes']:.3e}B "
+                    f"peak={'tpu~' if variant=='fit' else ''}{peak/1e9:.2f}GB"
+                )
+        except Exception as e:  # noqa: BLE001 — a failing cell is a bug we record
+            status = "error"
+            rec["variants"][variant] = {
+                "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-4000:],
+            }
+            if verbose:
+                print(f"[ERR:{variant}] {arch} x {shape_name} x {mesh_name}: {e}")
+    rec["status"] = status
+    _write(rec, out_dir)
+    return rec
+
+
+def _extrapolated_cost(base_cfg, shape, mesh, rules1, rules2, quantize):
+    period = len(base_cfg.pattern)
+    mk = lambda g: base_cfg.replace(
+        n_layers=g * period, stack_mode="unroll", unroll_attn=True, remat=False
+    )
+    v1 = _run_variant(mk(1), shape, mesh, rules1, 1, quantize=quantize)
+    v2 = _run_variant(mk(2), shape, mesh, rules2, 1, quantize=quantize)
+    g = base_cfg.n_groups
+
+    def ext(a, b):
+        if a is None or b is None:
+            return None
+        per = b - a
+        return (a - per) + g * per
+
+    coll_ops = {
+        op: ext(v1["collectives"]["per_op_bytes"].get(op, 0.0), v2["collectives"]["per_op_bytes"].get(op, 0.0))
+        for op in set(v1["collectives"]["per_op_bytes"]) | set(v2["collectives"]["per_op_bytes"])
+    }
+    return {
+        "stack_mode": "unroll(extrapolated 1->2 groups)",
+        "n_micro": 1 if shape.kind == "train" else None,
+        "extrapolated": True,
+        "lower_s": v1["lower_s"] + v2["lower_s"],
+        "compile_s": v1["compile_s"] + v2["compile_s"],
+        "flops_per_device": ext(v1["flops_per_device"], v2["flops_per_device"]),
+        "bytes_per_device": ext(v1["bytes_per_device"], v2["bytes_per_device"]),
+        "collectives": {
+            "per_op_bytes": coll_ops,
+            "counts": v2["collectives"]["counts"],
+            "total_bytes": float(sum(v for v in coll_ops.values() if v)),
+            "tpu_adjusted_bytes": ext(
+                v1["collectives"].get("tpu_adjusted_bytes", 0.0),
+                v2["collectives"].get("tpu_adjusted_bytes", 0.0),
+            ),
+        },
+        "memory": v2["memory"],  # not meaningful for cost; fit variant governs
+        "hlo_chars": v2["hlo_chars"],
+        "fallbacks": [],
+    }
+
+
+def _write(rec: dict, out_dir: Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = f"__{rec['tag']}" if rec.get("tag") else ""
+    path = out_dir / f"{rec['arch']}__{rec['shape']}__{rec['mesh']}{tag}.json"
+    path.write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variants", default="fit,cost")
+    ap.add_argument("--n-micro", type=int, default=8)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(ARTIFACTS))
+    args = ap.parse_args()
+
+    archs = lm_arch_names() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(
+                    run_cell(
+                        arch,
+                        shape,
+                        mp,
+                        n_micro=args.n_micro,
+                        variants=tuple(args.variants.split(",")),
+                        tag=args.tag,
+                        out_dir=Path(args.out),
+                    )
+                )
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n=== dry-run summary: {n_ok} ok, {n_skip} skip, {n_err} error ===")
+    if n_err:
+        for r in results:
+            if r["status"] == "error":
+                errs = {k: v.get("error") for k, v in r.get("variants", {}).items() if "error" in v}
+                print(f"  FAILED {r['arch']} x {r['shape']} x {r['mesh']}: {errs}")
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

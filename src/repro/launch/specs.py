@@ -1,0 +1,96 @@
+"""Input ShapeDtypeStruct stand-ins per (architecture x input shape) cell.
+
+Shapes from the assignment:
+    train_4k      seq_len=4,096  global_batch=256   (train_step)
+    prefill_32k   seq_len=32,768 global_batch=32    (prefill serve step)
+    decode_32k    seq_len=32,768 global_batch=128   (decode serve step)
+    long_500k     seq_len=524,288 global_batch=1    (long-context decode)
+
+Skips (recorded in EXPERIMENTS.md):
+    * encoder-only archs (hubert) have no decode step -> decode_32k /
+      long_500k skipped;
+    * pure full-attention archs skip long_500k (needs sub-quadratic
+      attention); SSM / hybrid / SWA archs run it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ArchConfig, shape: ShapeSpec) -> Optional[str]:
+    if cfg.is_encoder and shape.kind == "decode":
+        return "encoder-only: no decode step"
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch: long_500k needs sub-quadratic attention"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeSpec) -> tuple[dict, dict]:
+    """Returns (tree of ShapeDtypeStruct, tree of logical axis tuples) for
+    the *data* inputs of the step (params/caches handled separately)."""
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend == "audio_frames":
+            specs = {"frames": _sds((b, s, cfg.frontend_dim), jnp.float32)}
+            logical = {"frames": ("batch", "seq", "frontend")}
+        elif cfg.frontend == "vision_patches":
+            st = s - cfg.n_patches
+            specs = {
+                "tokens": _sds((b, st), i32),
+                "patches": _sds((b, cfg.n_patches, cfg.frontend_dim), jnp.float32),
+            }
+            logical = {
+                "tokens": ("batch", "seq"),
+                "patches": ("batch", "seq", "frontend"),
+            }
+        else:
+            specs = {"tokens": _sds((b, s), i32)}
+            logical = {"tokens": ("batch", "seq")}
+        if shape.kind == "train":
+            lt = specs.get("tokens")
+            lbl_len = lt.shape[1] if lt is not None else s
+            specs["labels"] = _sds((b, lbl_len), i32)
+            logical["labels"] = ("batch", "seq")
+        return specs, logical
+    # decode
+    specs = {
+        "token": _sds((b, 1), i32),
+        "pos": _sds((), i32),
+    }
+    logical = {"token": ("decode_batch", None), "pos": ()}
+    return specs, logical
+
+
+def cache_specs(cfg: ArchConfig, shape: ShapeSpec, model_axis_size: int = 16):
+    caches = T.cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    seq_axis = "kv_seq" if cfg.n_kv_heads % model_axis_size == 0 else "kv_seq_model"
+    logical = T.cache_logical_axes(cfg, seq_axis=seq_axis)
+    return caches, logical

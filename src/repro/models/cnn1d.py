@@ -1,0 +1,230 @@
+"""The 1D-F-CNN (SHIELD8-UAV §III-A, eq. 1) as a pure-JAX functional model.
+
+Three blocks of  o = D_0.2( M_1x2( ReLU( C_1x3(x) ) ) )  followed by dense
+layers for binary UAV classification.  The canonical (deployed) MFCC-20
+configuration reproduces the paper's flatten size exactly:
+
+    M=1096 --pool/2--> 548 --pool/2--> 274 --pool/2--> 137 frames x 256 ch
+    flatten = 137 * 256 = 35,072          (Table I, before pruning)
+    pruned  = 136 * 64  =  8,704          (Table I, after pruning)
+
+Every matmul/conv dispatches through the PrecisionPolicy (the multi-
+precision datapath), and PACT clip parameters α are learnable per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision_policy import Precision, PrecisionPolicy
+from repro.core.pruning import PruneSpec, apply_prune_conv, apply_prune_dense, plan_prune
+from repro.core.quantization import activation_quantize, quantize_tensor
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    input_len: int = 1096
+    channels: tuple[int, ...] = (64, 128, 256)
+    kernel: int = 3
+    hidden: int = 64
+    n_classes: int = 2
+    dropout: float = 0.2
+
+    @property
+    def n_frames(self) -> int:
+        n = self.input_len
+        for _ in self.channels:
+            n //= 2
+        return n
+
+    @property
+    def flatten_size(self) -> int:
+        return self.n_frames * self.channels[-1]
+
+
+CANONICAL = CNNConfig()  # flatten 35,072
+assert CANONICAL.flatten_size == 35_072
+
+
+def init_params(rng: jax.Array, cfg: CNNConfig = CANONICAL) -> dict:
+    """He-init conv + dense weights; per-layer PACT α initialised at 6."""
+    keys = jax.random.split(rng, len(cfg.channels) + 2)
+    params: dict = {}
+    c_in = 1
+    for i, c_out in enumerate(cfg.channels):
+        fan_in = cfg.kernel * c_in
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(keys[i], (cfg.kernel, c_in, c_out)) * np.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((c_out,)),
+            "alpha": jnp.asarray(6.0),
+        }
+        c_in = c_out
+    params["dense0"] = {
+        "w": jax.random.normal(keys[-2], (cfg.flatten_size, cfg.hidden))
+        * np.sqrt(2.0 / cfg.flatten_size),
+        "b": jnp.zeros((cfg.hidden,)),
+        "alpha": jnp.asarray(6.0),
+    }
+    params["dense1"] = {
+        "w": jax.random.normal(keys[-1], (cfg.hidden, cfg.n_classes)) * np.sqrt(2.0 / cfg.hidden),
+        "b": jnp.zeros((cfg.n_classes,)),
+    }
+    return params
+
+
+def _conv1d(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B, L, C_in), w: (K, C_in, C_out) -> (B, L, C_out), 'same' padding."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+    )
+
+
+def _maxpool2(x: jax.Array) -> jax.Array:
+    """M_1x2: max-pool width 2, stride 2 over the length axis."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 1), (1, 2, 1), "VALID"
+    )
+
+
+def forward(
+    params: dict,
+    x: jax.Array,
+    cfg: CNNConfig = CANONICAL,
+    *,
+    policy: Optional[PrecisionPolicy] = None,
+    train: bool = False,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """x: (B, M) feature vectors -> (B, n_classes) logits.
+
+    ``policy`` selects the per-layer numeric mode (fake-quant emulation of
+    the shared datapath); ``train`` enables dropout (eq. 1's D_0.2).
+    """
+    policy = policy or PrecisionPolicy()
+    h = x[:, :, None].astype(jnp.float32)  # (B, L, 1)
+    for i in range(len(cfg.channels)):
+        name = f"conv{i}"
+        p = params[name]
+        prec = policy.precision_for(f"{name}/w")
+        w = quantize_tensor(p["w"], prec, axis=2)
+        h = _conv1d(h, w) + p["b"]
+        h = jax.nn.relu(h)
+        if prec.is_integer:
+            h = activation_quantize(h, prec, p["alpha"])
+        elif prec == Precision.BF16:
+            h = activation_quantize(h, prec)
+        h = _maxpool2(h)
+        if train and cfg.dropout > 0:
+            assert rng is not None, "dropout needs rng"
+            rng, sub = jax.random.split(rng)
+            keep = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep, h / (1.0 - cfg.dropout), 0.0)
+    h = h.reshape(h.shape[0], -1)  # flatten (frames, channels) row-major
+    p = params["dense0"]
+    prec = policy.precision_for("dense0/w")
+    h = h @ quantize_tensor(p["w"], prec, axis=1) + p["b"]
+    h = jax.nn.relu(h)
+    if prec.is_integer:
+        h = activation_quantize(h, prec, p["alpha"])
+    elif prec == Precision.BF16:
+        h = activation_quantize(h, prec)
+    p = params["dense1"]
+    prec = policy.precision_for("dense1/w")
+    return h @ quantize_tensor(p["w"], prec, axis=1) + p["b"]
+
+
+# ---------------------------------------------------------------------------
+# Structured pruning of the trained model (§III-C)
+# ---------------------------------------------------------------------------
+
+
+def prune_model(params: dict, cfg: CNNConfig = CANONICAL, *, keep: int = 64, trim_frames: int = 1):
+    """Prune the final conv block's channels + boundary frame; returns
+    (pruned_params, pruned_cfg, PruneSpec).  Canonical config: 35,072→8,704."""
+    last = len(cfg.channels) - 1
+    spec = plan_prune(params[f"conv{last}"]["w"], cfg.n_frames, keep=keep, trim_frames=trim_frames)
+    new = {k: dict(v) for k, v in params.items()}
+    w, b = apply_prune_conv(params[f"conv{last}"]["w"], params[f"conv{last}"]["b"], spec)
+    new[f"conv{last}"]["w"], new[f"conv{last}"]["b"] = w, b
+    new["dense0"]["w"] = apply_prune_dense(
+        params["dense0"]["w"], spec, cfg.n_frames, cfg.channels[-1]
+    )
+    pruned_cfg = dataclasses.replace(cfg, channels=cfg.channels[:-1] + (keep,))
+    return new, pruned_cfg, spec
+
+
+def forward_pruned(
+    params: dict, x: jax.Array, cfg: CNNConfig, spec: PruneSpec, **kw
+) -> jax.Array:
+    """Forward pass for a pruned model: same graph, plus the frame trim
+    between the last pool and the flatten."""
+    policy = kw.pop("policy", None) or PrecisionPolicy()
+    train = kw.pop("train", False)
+    rng = kw.pop("rng", None)
+    h = x[:, :, None].astype(jnp.float32)
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i}"]
+        prec = policy.precision_for(f"conv{i}/w")
+        w = quantize_tensor(p["w"], prec, axis=2)
+        h = _conv1d(h, w) + p["b"]
+        h = jax.nn.relu(h)
+        if prec.is_integer:
+            h = activation_quantize(h, prec, p["alpha"])
+        h = _maxpool2(h)
+        if train and cfg.dropout > 0:
+            rng, sub = jax.random.split(rng)
+            keep_m = jax.random.bernoulli(sub, 1.0 - cfg.dropout, h.shape)
+            h = jnp.where(keep_m, h / (1.0 - cfg.dropout), 0.0)
+    h = h[:, : len(spec.keep_frames), :]  # boundary-frame trim
+    h = h.reshape(h.shape[0], -1)
+    p = params["dense0"]
+    prec = policy.precision_for("dense0/w")
+    h = jax.nn.relu(h @ quantize_tensor(p["w"], prec, axis=1) + p["b"])
+    if prec.is_integer:
+        h = activation_quantize(h, prec, p["alpha"])
+    p = params["dense1"]
+    return h @ quantize_tensor(p["w"], policy.precision_for("dense1/w"), axis=1) + p["b"]
+
+
+def calibrate_alphas(params: dict, x: jax.Array, cfg: CNNConfig = CANONICAL, pct: float = 99.9) -> dict:
+    """Set each layer's PACT clip α to the ``pct`` percentile of its fp32
+    activations on a calibration batch — the deployment analogue of the
+    paper's *learned* clipping parameter (eq. 7).  An uncalibrated α either
+    clips real signal (too low) or wastes integer levels (too high); this is
+    what keeps the 8-bit modes within the paper's <2.5%% accuracy budget."""
+    new = {k: dict(v) for k, v in params.items()}
+    h = x[:, :, None].astype(jnp.float32)
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i}"]
+        h = jax.nn.relu(_conv1d(h, p["w"].astype(jnp.float32)) + p["b"])
+        new[f"conv{i}"]["alpha"] = jnp.percentile(h, pct)
+        h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    p = params["dense0"]
+    h = jax.nn.relu(h @ p["w"].astype(jnp.float32) + p["b"])
+    new["dense0"]["alpha"] = jnp.percentile(h, pct)
+    return new
+
+
+def count_params(params) -> int:
+    return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
+
+
+def layer_macs(cfg: CNNConfig = CANONICAL, pruned_flatten: Optional[int] = None) -> dict[str, int]:
+    """Per-layer MAC counts — feeds the cycle-accurate timing model (eqs. 9-10)."""
+    macs = {}
+    length = cfg.input_len
+    c_in = 1
+    for i, c_out in enumerate(cfg.channels):
+        macs[f"conv{i}"] = length * cfg.kernel * c_in * c_out
+        length //= 2
+        c_in = c_out
+    flat = pruned_flatten if pruned_flatten is not None else length * c_in
+    macs["dense0"] = flat * cfg.hidden
+    macs["dense1"] = cfg.hidden * cfg.n_classes
+    return macs

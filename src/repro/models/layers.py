@@ -1,0 +1,369 @@
+"""Shared LM building blocks: param specs, norms, RoPE, attention, MLPs.
+
+Conventions
+-----------
+* Params are nested dicts of arrays.  Every layer declares its parameters as
+  ``PSpec`` (shape + logical sharding axes + init), from which real init,
+  abstract init (dry-run), and sharding trees all derive.
+* ``qeinsum`` is the precision-aware matmul: weights may be ``QTensor``
+  (int8 + scale) per the precision policy — the LM-scale face of the paper's
+  multi-precision datapath.  int8 weights halve/quarter HBM traffic; the
+  dequant is a fused convert on the MXU path.
+* Attention supports: GQA, RoPE, causal + sliding-window masks, dense or
+  KV-chunked (online-softmax) computation, prefill cache emission, single-
+  token decode against linear or ring (windowed) caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.quantization import QTensor
+from repro.distributed.sharding import constrain, kv_seq_axis
+
+
+class PSpec(NamedTuple):
+    shape: tuple[int, ...]
+    logical: tuple[Optional[str], ...]
+    init: str = "normal"  # normal | zeros | ones
+    dtype: Optional[str] = None  # override cfg.param_dtype
+
+
+def init_from_specs(rng: jax.Array, specs: Any, cfg: ArchConfig):
+    """Materialise a PSpec tree into real parameters."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=lambda x: isinstance(x, PSpec))
+    keys = jax.random.split(rng, len(leaves))
+    vals = []
+    for key, s in zip(keys, leaves):
+        dt = jnp.dtype(s.dtype or cfg.param_dtype)
+        if s.init == "zeros":
+            vals.append(jnp.zeros(s.shape, dt))
+        elif s.init == "ones":
+            vals.append(jnp.ones(s.shape, dt))
+        else:
+            fan_in = s.shape[0] if len(s.shape) >= 2 else max(s.shape[-1], 1)
+            vals.append((jax.random.normal(key, s.shape, jnp.float32) / np.sqrt(fan_in)).astype(dt))
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def abstract_from_specs(specs: Any, cfg: ArchConfig):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype or cfg.param_dtype)),
+        specs,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+def logical_from_specs(specs: Any):
+    return jax.tree_util.tree_map(
+        lambda s: s.logical, specs, is_leaf=lambda x: isinstance(x, PSpec)
+    )
+
+
+def stack_specs(specs: Any, n: int, axis_name: str = "layers"):
+    """Prepend a stacked 'layers' axis to every PSpec (scan-over-layers)."""
+    return jax.tree_util.tree_map(
+        lambda s: PSpec((n,) + s.shape, (axis_name,) + s.logical, s.init, s.dtype),
+        specs,
+        is_leaf=lambda x: isinstance(x, PSpec),
+    )
+
+
+# ---------------------------------------------------------------------------
+# precision-aware matmul
+# ---------------------------------------------------------------------------
+
+
+def qeinsum(spec: str, x: jax.Array, w, **kw) -> jax.Array:
+    """einsum that accepts QTensor weights (weight-only int8 execution)."""
+    if isinstance(w, QTensor):
+        w = (w.q.astype(x.dtype) * w.scale.astype(x.dtype))
+    return jnp.einsum(spec, x, w, **kw)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_specs(d: int) -> dict:
+    return {"scale": PSpec((d,), ("embed",), init="ones", dtype="float32")}
+
+
+def rmsnorm(p, x: jax.Array, eps: float) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, Dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :].astype(x.dtype)
+    sin = jnp.sin(ang)[..., None, :].astype(x.dtype)
+    x1, x2 = x[..., :half], x[..., half : 2 * half]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if 2 * half != dh:  # odd head_dim tail passes through
+        rot = jnp.concatenate([rot, x[..., 2 * half :]], axis=-1)
+    return rot
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+ATTN_CHUNK = 1024  # KV-chunked (online softmax) path beyond this seq length
+
+
+def attn_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "norm": rmsnorm_specs(d),
+        "wq": PSpec((d, h, dh), ("embed", "heads", "head_dim")),
+        "wk": PSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wv": PSpec((d, kv, dh), ("embed", "kv_heads", "head_dim")),
+        "wo": PSpec((h, dh, d), ("heads", "head_dim", "embed")),
+    }
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnCacheSpec:
+    length: int  # buffer length (== window for ring caches)
+    ring: bool
+
+
+def attn_cache_shape(cfg: ArchConfig, batch: int, max_seq: int, window: Optional[int]):
+    """Cache buffer spec: windowed layers get ring buffers of window length —
+    for gemma3's long_500k decode this is the difference between a 1k and a
+    512k KV buffer on 5/6 of the layers."""
+    if window is not None and window < max_seq:
+        return AttnCacheSpec(length=window, ring=True)
+    return AttnCacheSpec(length=max_seq, ring=False)
+
+
+def _qkv(p, x, cfg: ArchConfig, positions):
+    q = qeinsum("bsd,dhk->bshk", x, p["wq"])
+    k = qeinsum("bsd,dhk->bshk", x, p["wk"])
+    v = qeinsum("bsd,dhk->bshk", x, p["wv"])
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, ("batch", "seq", "heads", "head_dim"))
+    k = constrain(k, ("batch", "seq", "kv_heads", "head_dim"))
+    v = constrain(v, ("batch", "seq", "kv_heads", "head_dim"))
+    return q, k, v
+
+
+def _dense_attention(q, k, v, cfg: ArchConfig, window, causal: bool):
+    """Materialised-scores path for short sequences."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    scores *= 1.0 / np.sqrt(dh)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= j <= i
+    if window is not None:
+        mask &= j > i - window
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(b, s, h, dh)
+
+
+def _chunked_attention(q, k, v, cfg: ArchConfig, window, causal: bool):
+    """KV-chunked online-softmax attention: memory O(S * chunk), not O(S^2)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    c = ATTN_CHUNK
+    n_chunks = (s + c - 1) // c
+    pad = n_chunks * c - s
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kp = kp.reshape(b, n_chunks, c, kvh, dh).transpose(1, 0, 2, 3, 4)
+    vp = vp.reshape(b, n_chunks, c, kvh, dh).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, s, kvh, g, dh)
+    scale = 1.0 / np.sqrt(dh)
+    i_pos = jnp.arange(s)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc, vc, idx = xs
+        j_pos = idx * c + jnp.arange(c)
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kc).astype(jnp.float32) * scale
+        mask = j_pos[None, :] < s + 0 * i_pos[:, None]  # drop padded kv
+        if causal:
+            mask &= j_pos[None, :] <= i_pos[:, None]
+        if window is not None:
+            mask &= j_pos[None, :] > i_pos[:, None] - window
+        sc = jnp.where(mask, sc, -1e30)
+        m_new = jnp.maximum(m, sc.max(axis=-1, keepdims=True))
+        p = jnp.exp(sc - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1, keepdims=True)
+        acc_new = acc * corr.astype(acc.dtype) + jnp.einsum(
+            "bkgst,btkd->bkgsd", p.astype(vc.dtype), vc
+        ).astype(acc.dtype)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s, 1), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s, 1), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, dh), jnp.float32)
+    if cfg.unroll_attn:
+        carry = (m0, l0, a0)  # unrolled for exact HLO cost accounting (dry-run)
+        for idx in range(n_chunks):
+            carry, _ = body(carry, (kp[idx], vp[idx], jnp.asarray(idx)))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kp, vp, jnp.arange(n_chunks)))
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, dh)
+
+
+def attn_fwd(
+    p,
+    x: jax.Array,
+    cfg: ArchConfig,
+    *,
+    window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,
+    emit_cache: Optional[AttnCacheSpec] = None,
+):
+    """Full-sequence attention block (pre-norm, residual).  Returns
+    (y, cache | None) where cache = {k, v} trimmed/rolled per the spec."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, positions)
+    if s <= ATTN_CHUNK:
+        out = _dense_attention(q, k, v, cfg, window, cfg.causal)
+    else:
+        out = _chunked_attention(q, k, v, cfg, window, cfg.causal)
+    y = qeinsum("bshk,hkd->bsd", out, p["wo"])
+    y = constrain(y, ("batch", "seq", "embed"))
+    cache = None
+    if emit_cache is not None:
+        L = emit_cache.length
+        if emit_cache.ring:
+            # last L positions, laid out so slot = pos % L
+            shift = (s % L) if s >= L else 0
+            cache = {
+                "k": jnp.roll(k[:, -L:], shift, axis=1) if s >= L else _pad_to(k, L),
+                "v": jnp.roll(v[:, -L:], shift, axis=1) if s >= L else _pad_to(v, L),
+            }
+        else:
+            cache = {"k": _pad_to(k, L), "v": _pad_to(v, L)}
+        ksa = kv_seq_axis(k.shape[2])
+        cache = {
+            n: constrain(t, ("batch", ksa, "kv_heads", "head_dim"))
+            for n, t in cache.items()
+        }
+    return x + y, cache
+
+
+def _pad_to(t: jax.Array, L: int) -> jax.Array:
+    s = t.shape[1]
+    if s == L:
+        return t
+    if s > L:
+        return t[:, :L]
+    return jnp.pad(t, ((0, 0), (0, L - s), (0, 0), (0, 0)))
+
+
+def attn_decode(
+    p,
+    x: jax.Array,  # (B, 1, D)
+    cache: dict,  # {"k": (B, L, Hkv, Dh), "v": ...}
+    pos: jax.Array,  # scalar int32: absolute position of the new token
+    cfg: ArchConfig,
+    *,
+    window: Optional[int] = None,
+    spec: AttnCacheSpec,
+):
+    """Single-token decode with linear or ring cache. Returns (y, new_cache)."""
+    b = x.shape[0]
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    positions = jnp.full((1, 1), pos, jnp.int32)
+    q, k, v = _qkv(p, h, cfg, positions)  # (B, 1, H/Hkv, Dh)
+    L = spec.length
+    slot = (pos % L) if spec.ring else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, slot, 0, 0))
+    ksa = kv_seq_axis(ck.shape[2])
+    ck = constrain(ck, ("decode_batch", ksa, "kv_heads", "head_dim"))
+    cv = constrain(cv, ("decode_batch", ksa, "kv_heads", "head_dim"))
+    hq, kvh, dh = q.shape[2], ck.shape[2], q.shape[3]
+    g = hq // kvh
+    qg = q.reshape(b, kvh, g, dh)
+    scores = jnp.einsum("bkgd,btkd->bkgt", qg, ck).astype(jnp.float32) / np.sqrt(dh)
+    t = jnp.arange(L)
+    if spec.ring:
+        # absolute position stored in slot s: largest value <= pos congruent s mod L
+        abs_pos = pos - ((pos - t) % L)
+        valid = abs_pos >= 0
+        if window is not None:
+            valid &= abs_pos > pos - window
+    else:
+        valid = t <= pos
+        if window is not None:
+            valid &= t > pos - window
+    scores = jnp.where(valid[None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cv.dtype)
+    out = jnp.einsum("bkgt,btkd->bkgd", w, cv).reshape(b, 1, hq, dh)
+    y = qeinsum("bshk,hkd->bsd", out.astype(x.dtype), p["wo"])
+    return x + y, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+
+def mlp_specs(cfg: ArchConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    base = {"norm": rmsnorm_specs(d)}
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        base.update(
+            wi_gate=PSpec((d, f), ("embed", "mlp")),
+            wi_up=PSpec((d, f), ("embed", "mlp")),
+            wo=PSpec((f, d), ("mlp", "embed")),
+        )
+    else:  # gelu
+        base.update(
+            wi=PSpec((d, f), ("embed", "mlp")),
+            wo=PSpec((f, d), ("mlp", "embed")),
+        )
+    return base
+
+
+def mlp_fwd(p, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    h = rmsnorm(p["norm"], x, cfg.norm_eps)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_kind == "swiglu" else jax.nn.gelu
+        g = act(qeinsum("bsd,df->bsf", h, p["wi_gate"]))
+        u = qeinsum("bsd,df->bsf", h, p["wi_up"])
+        ff = constrain(g * u, ("batch", "seq", "mlp"))
+        y = qeinsum("bsf,fd->bsd", ff, p["wo"])
+    else:
+        ff = jax.nn.gelu(qeinsum("bsd,df->bsf", h, p["wi"]))
+        ff = constrain(ff, ("batch", "seq", "mlp"))
+        y = qeinsum("bsf,fd->bsd", ff, p["wo"])
+    return x + constrain(y, ("batch", "seq", "embed"))

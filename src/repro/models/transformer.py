@@ -1,0 +1,410 @@
+"""Generic LM assembly: pattern-based blocks over a shared scanned datapath.
+
+One module drives all ten assigned architectures.  An ``ArchConfig.pattern``
+names the block kinds in one repeating group; the depth is ``n_groups``
+repetitions.  Execution follows the paper's sequential-datapath idea: one
+compiled group body is reused across the depth via ``lax.scan`` over
+layer-stacked parameters (``stack_mode="unroll"`` exists for the dry-run,
+where exact per-layer HLO cost accounting matters more than program size).
+
+Entry points:
+  forward(params, batch, cfg)                 full-seq logits (train / encoder)
+  forward_with_cache(params, batch, cfg, L)   prefill -> (last_logits, caches)
+  decode_step(params, token, caches, pos, cfg)  single-token serve step
+  loss_fn / train metrics helpers
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R6
+from repro.models.layers import PSpec
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _block_specs(kind: str, cfg: ArchConfig) -> dict:
+    if kind in ("attn", "local"):
+        return {"attn": L.attn_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    if kind == "moe":
+        return {"attn": L.attn_specs(cfg), "moe": MOE.moe_specs(cfg)}
+    if kind == "shared_attn":
+        return {}  # weights live in params["shared"]
+    if kind in ("mamba2", "mamba2_shared"):
+        return {"mamba": M2.mamba2_specs(cfg)}
+    if kind == "rwkv6":
+        return {"rwkv": R6.rwkv6_specs(cfg)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def build_specs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    group = {f"pos{i}": _block_specs(k, cfg) for i, k in enumerate(cfg.pattern)}
+    specs: dict = {
+        "embed": {"tok": PSpec((cfg.vocab, d), ("vocab", "embed"))},
+        "groups": L.stack_specs(group, cfg.n_groups),
+        "final_norm": L.rmsnorm_specs(d),
+    }
+    if "shared_attn" in cfg.pattern or "mamba2_shared" in cfg.pattern:
+        specs["shared"] = {"attn": L.attn_specs(cfg), "mlp": L.mlp_specs(cfg)}
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PSpec((d, cfg.vocab), ("embed", "vocab"))
+    if cfg.frontend == "audio_frames":
+        specs["frontend"] = {
+            "proj": PSpec((cfg.frontend_dim, d), ("frontend", "embed")),
+            "norm": L.rmsnorm_specs(d),
+        }
+    elif cfg.frontend == "vision_patches":
+        specs["frontend"] = {
+            "norm_in": L.rmsnorm_specs(cfg.frontend_dim),
+            "proj1": PSpec((cfg.frontend_dim, d), ("frontend", "embed")),
+            "proj2": PSpec((d, d), ("embed", "embed")),
+        }
+    return specs
+
+
+def init_params(rng: jax.Array, cfg: ArchConfig):
+    return L.init_from_specs(rng, build_specs(cfg), cfg)
+
+
+def abstract_params(cfg: ArchConfig):
+    return L.abstract_from_specs(build_specs(cfg), cfg)
+
+
+def logical_axes(cfg: ArchConfig):
+    return L.logical_from_specs(build_specs(cfg))
+
+
+def param_count(cfg: ArchConfig) -> int:
+    tree = abstract_params(cfg)
+    n = sum(int(np.prod(t.shape)) for t in jax.tree_util.tree_leaves(tree))
+    if "shared_attn" in cfg.pattern:
+        pass  # shared weights counted once already
+    return n
+
+
+def active_param_count(cfg: ArchConfig) -> int:
+    """Params touched per token (MoE: top_k of n_experts)."""
+    n = param_count(cfg)
+    if cfg.n_experts and cfg.top_k:
+        tree = abstract_params(cfg)
+        e_params = 0
+        for sub in _find_subtrees(tree["groups"], "moe"):
+            for name in ("wi_gate", "wi_up", "wo"):
+                e_params += int(np.prod(sub[name].shape))
+        n -= int(e_params * (1 - cfg.top_k / cfg.n_experts))
+    return n
+
+
+def _find_subtrees(tree, key):
+    out = []
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            if k == key and isinstance(v, dict):
+                out.append(v)
+            elif isinstance(v, dict):
+                out.extend(_find_subtrees(v, key))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# embedding / frontend
+# ---------------------------------------------------------------------------
+
+
+def embed_fwd(params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    if cfg.frontend == "audio_frames":
+        h = L.qeinsum("bsf,fd->bsd", batch["frames"].astype(jnp.dtype(cfg.act_dtype)), params["frontend"]["proj"])
+        h = L.rmsnorm(params["frontend"]["norm"], h, cfg.norm_eps)
+    else:
+        if cfg.sharded_embed_gather:
+            from repro.distributed.embedding import embedding_gather
+
+            tok = embedding_gather(params["embed"]["tok"], batch["tokens"])
+        else:
+            tok = jnp.take(params["embed"]["tok"], batch["tokens"], axis=0)
+        if cfg.scale_embed:
+            tok = tok * jnp.asarray(np.sqrt(cfg.d_model), tok.dtype)
+        h = tok
+        if cfg.frontend == "vision_patches" and "patches" in batch:  # prefill/train only
+            f = params["frontend"]
+            pe = L.rmsnorm(f["norm_in"], batch["patches"].astype(tok.dtype), cfg.norm_eps)
+            pe = jax.nn.gelu(L.qeinsum("bpf,fd->bpd", pe, f["proj1"]))
+            pe = L.qeinsum("bpd,de->bpe", pe, f["proj2"])
+            h = jnp.concatenate([pe, tok], axis=1)
+    return constrain(h.astype(jnp.dtype(cfg.act_dtype)), ("batch", "seq", "embed"))
+
+
+def unembed(params, h: jax.Array, cfg: ArchConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = L.qeinsum("bsd,vd->bsv", h, params["embed"]["tok"])
+    else:
+        logits = L.qeinsum("bsd,dv->bsv", h, params["lm_head"])
+    return constrain(logits.astype(jnp.float32), ("batch", "seq", "vocab"))
+
+
+# ---------------------------------------------------------------------------
+# block dispatch (full-sequence)
+# ---------------------------------------------------------------------------
+
+
+def _window_for(kind: str, cfg: ArchConfig) -> Optional[int]:
+    return cfg.window if kind == "local" else None
+
+
+def block_fwd(kind, p, x, cfg: ArchConfig, shared, cache_len: Optional[int] = None):
+    """Full-seq block.  Returns (x, cache_or_none); cache emitted only when
+    ``cache_len`` is given (prefill)."""
+    window = _window_for(kind, cfg)
+    if kind in ("attn", "local", "moe", "shared_attn"):
+        ap = shared["attn"] if kind == "shared_attn" else p["attn"]
+        emit = None
+        if cache_len is not None:
+            emit = L.attn_cache_shape(cfg, x.shape[0], cache_len, window)
+        x, cache = L.attn_fwd(ap, x, cfg, window=window, emit_cache=emit)
+        if kind == "moe":
+            x = MOE.moe_block(p["moe"], x, cfg)
+        elif kind == "shared_attn":
+            x = L.mlp_fwd(shared["mlp"], x, cfg)
+        else:
+            x = L.mlp_fwd(p["mlp"], x, cfg)
+        return x, cache
+    if kind == "mamba2":
+        x, st = M2.mamba2_fwd(p["mamba"], x, cfg, emit_state=cache_len is not None)
+        return x, st
+    if kind == "mamba2_shared":
+        # zamba2: a mamba block followed by the *shared* attention+MLP block
+        x, st = M2.mamba2_fwd(p["mamba"], x, cfg, emit_state=cache_len is not None)
+        emit = None
+        if cache_len is not None:
+            emit = L.attn_cache_shape(cfg, x.shape[0], cache_len, None)
+        x, kv = L.attn_fwd(shared["attn"], x, cfg, window=None, emit_cache=emit)
+        x = L.mlp_fwd(shared["mlp"], x, cfg)
+        if cache_len is not None:
+            return x, {"mamba": st, "attn": kv}
+        return x, None
+    if kind == "rwkv6":
+        x, st = R6.rwkv6_fwd(p["rwkv"], x, cfg, emit_state=cache_len is not None)
+        return x, st
+    raise ValueError(kind)
+
+
+def block_decode(kind, p, x, cache, pos, cfg: ArchConfig, shared, max_seq: int):
+    window = _window_for(kind, cfg)
+    if kind in ("attn", "local", "moe", "shared_attn"):
+        ap = shared["attn"] if kind == "shared_attn" else p["attn"]
+        spec = L.attn_cache_shape(cfg, x.shape[0], max_seq, window)
+        x, cache = L.attn_decode(ap, x, cache, pos, cfg, window=window, spec=spec)
+        if kind == "moe":
+            x = MOE.moe_block(p["moe"], x, cfg)
+        elif kind == "shared_attn":
+            x = L.mlp_fwd(shared["mlp"], x, cfg)
+        else:
+            x = L.mlp_fwd(p["mlp"], x, cfg)
+        return x, cache
+    if kind == "mamba2":
+        return M2.mamba2_decode(p["mamba"], x, cache, cfg)
+    if kind == "mamba2_shared":
+        x, st = M2.mamba2_decode(p["mamba"], x, cache["mamba"], cfg)
+        spec = L.attn_cache_shape(cfg, x.shape[0], max_seq, None)
+        x, kv = L.attn_decode(shared["attn"], x, cache["attn"], pos, cfg, window=None, spec=spec)
+        x = L.mlp_fwd(shared["mlp"], x, cfg)
+        return x, {"mamba": st, "attn": kv}
+    if kind == "rwkv6":
+        return R6.rwkv6_decode(p["rwkv"], x, cache, cfg)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# stacked execution (scan = sequential shared datapath; unroll = dry-run)
+# ---------------------------------------------------------------------------
+
+
+def _group_fwd(cfg: ArchConfig, shared, cache_len):
+    def body(gp, x):
+        caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, c = block_fwd(kind, gp[f"pos{i}"], x, cfg, shared, cache_len)
+            if cache_len is not None:
+                caches[f"pos{i}"] = c if c is not None else {}
+        return x, caches
+
+    return body
+
+
+def run_stack(params, x, cfg: ArchConfig, cache_len: Optional[int] = None):
+    shared = params.get("shared")
+    body = _group_fwd(cfg, shared, cache_len)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    if cfg.stack_mode == "scan":
+        def step(carry, gp):
+            y, caches = body(gp, carry)
+            return y, caches
+        x, caches = jax.lax.scan(step, x, params["groups"])
+    else:
+        caches_list = []
+        for gi in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda t, gi=gi: t[gi], params["groups"])
+            x, c = body(gp, x)
+            caches_list.append(c)
+        caches = (
+            jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *caches_list)
+            if cache_len is not None
+            else None
+        )
+    return x, caches
+
+
+def run_stack_decode(params, x, caches, pos, cfg: ArchConfig, max_seq: int):
+    shared = params.get("shared")
+
+    def body(gp_and_cache, x):
+        gp, gcache = gp_and_cache
+        new_caches = {}
+        for i, kind in enumerate(cfg.pattern):
+            x, c = block_decode(kind, gp[f"pos{i}"], x, gcache[f"pos{i}"], pos, cfg, shared, max_seq)
+            new_caches[f"pos{i}"] = c
+        return x, new_caches
+
+    if cfg.stack_mode == "scan":
+        def step(carry, xs):
+            y, nc = body(xs, carry)
+            return y, nc
+        x, new_caches = jax.lax.scan(step, x, (params["groups"], caches))
+    else:
+        ncs = []
+        for gi in range(cfg.n_groups):
+            gp = jax.tree_util.tree_map(lambda t, gi=gi: t[gi], params["groups"])
+            gc = jax.tree_util.tree_map(lambda t, gi=gi: t[gi], caches)
+            x, nc = body((gp, gc), x)
+            ncs.append(nc)
+        new_caches = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *ncs)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+def forward(params, batch: dict, cfg: ArchConfig, *, last_only: bool = False) -> jax.Array:
+    h = embed_fwd(params, batch, cfg)
+    h, _ = run_stack(params, h, cfg)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    if last_only:
+        h = h[:, -1:]
+    return unembed(params, h, cfg)
+
+
+def forward_with_cache(params, batch: dict, cfg: ArchConfig, max_seq: int):
+    """Prefill: returns (last-token logits, caches sized for max_seq decode)."""
+    h = embed_fwd(params, batch, cfg)
+    h, caches = run_stack(params, h, cfg, cache_len=max_seq)
+    h = L.rmsnorm(params["final_norm"], h[:, -1:], cfg.norm_eps)
+    return unembed(params, h, cfg), caches
+
+
+def decode_step(params, token: jax.Array, caches, pos: jax.Array, cfg: ArchConfig, max_seq: int):
+    """One serve step: token (B, 1) int32 (or frame/patch stub), absolute
+    position ``pos``; returns (logits (B, 1, V), new caches)."""
+    h = embed_fwd(params, {"tokens": token}, cfg)
+    h = constrain(h, ("decode_batch", "seq", "embed"))
+    h, new_caches = run_stack_decode(params, h, caches, pos, cfg, max_seq)
+    h = L.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, h, cfg), new_caches
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_seq: int):
+    """Abstract cache tree for the dry-run serve step (ShapeDtypeStruct)."""
+    act = jnp.dtype(cfg.act_dtype)
+    group = {}
+    for i, kind in enumerate(cfg.pattern):
+        window = _window_for(kind, cfg)
+        if kind in ("attn", "local", "moe", "shared_attn"):
+            spec = L.attn_cache_shape(cfg, batch, max_seq, window)
+            shp = (batch, spec.length, cfg.n_kv_heads, cfg.head_dim)
+            group[f"pos{i}"] = {
+                "k": jax.ShapeDtypeStruct(shp, act),
+                "v": jax.ShapeDtypeStruct(shp, act),
+            }
+        elif kind == "mamba2":
+            group[f"pos{i}"] = M2.mamba2_state_shapes(cfg, batch)
+        elif kind == "mamba2_shared":
+            spec = L.attn_cache_shape(cfg, batch, max_seq, None)
+            shp = (batch, spec.length, cfg.n_kv_heads, cfg.head_dim)
+            group[f"pos{i}"] = {
+                "mamba": M2.mamba2_state_shapes(cfg, batch),
+                "attn": {
+                    "k": jax.ShapeDtypeStruct(shp, act),
+                    "v": jax.ShapeDtypeStruct(shp, act),
+                },
+            }
+        elif kind == "rwkv6":
+            group[f"pos{i}"] = R6.rwkv6_state_shapes(cfg, batch)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_groups,) + s.shape, s.dtype), group
+    )
+
+
+def cache_logical_axes(cfg: ArchConfig, seq_axis: str = "kv_seq"):
+    """Logical sharding axes mirroring cache_shapes.  ``seq_axis`` is
+    "kv_seq_model" when kv_heads cannot shard over the model axis (the
+    launcher decides by divisibility)."""
+    group = {}
+    for i, kind in enumerate(cfg.pattern):
+        if kind in ("attn", "local", "moe", "shared_attn"):
+            ax = ("layers", "decode_batch", seq_axis, "kv_heads", "head_dim")
+            group[f"pos{i}"] = {"k": ax, "v": ax}
+        elif kind == "mamba2":
+            group[f"pos{i}"] = {
+                "conv": ("layers", "decode_batch", None, "ssm_heads"),
+                "ssm": ("layers", "decode_batch", "ssm_heads", "ssm_state", None),
+            }
+        elif kind == "mamba2_shared":
+            kvax = ("layers", "decode_batch", seq_axis, "kv_heads", "head_dim")
+            group[f"pos{i}"] = {
+                "mamba": {
+                    "conv": ("layers", "decode_batch", None, "ssm_heads"),
+                    "ssm": ("layers", "decode_batch", "ssm_heads", "ssm_state", None),
+                },
+                "attn": {"k": kvax, "v": kvax},
+            }
+        elif kind == "rwkv6":
+            group[f"pos{i}"] = {
+                "tm_shift": ("layers", "decode_batch", None, "embed"),
+                "wkv": ("layers", "decode_batch", "heads", "head_dim", None),
+                "cm_shift": ("layers", "decode_batch", None, "embed"),
+            }
+    return group
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def loss_fn(params, batch: dict, cfg: ArchConfig) -> jax.Array:
+    """Causal-LM (or framewise, for encoders) cross entropy.  Labels of -1
+    are masked."""
+    logits = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.frontend == "vision_patches":
+        logits = logits[:, -labels.shape[1] :]  # loss over the text positions
+    mask = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels_safe[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1)

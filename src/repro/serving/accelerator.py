@@ -1,0 +1,46 @@
+"""Deployed-datapath inference: the whole 1D-F-CNN through the Pallas kernels.
+
+This is the software twin of the POLARON accelerator's execution: every
+convolution and dense layer runs on the W8A8 quant_matmul kernel (conv via
+im2col on the shared MAC datapath), activations run through the fixed-point
+CORDIC unit, and the classifier head finishes with the CORDIC softmax.
+Against fp32 JAX inference this bounds the *accelerator's* end-to-end
+numerical deviation — the sign-off artifact an RTL team would diff against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models.cnn1d import CNNConfig, _maxpool2
+
+
+def accelerator_forward(params: dict, x: jax.Array, cfg: CNNConfig, *, fxp: bool = False) -> jax.Array:
+    """x: (B, M) features -> (B, n_classes) class probabilities, computed
+    entirely on the kernel datapath (interpret mode on CPU)."""
+    h = x[:, :, None].astype(jnp.float32)
+    for i in range(len(cfg.channels)):
+        p = params[f"conv{i}"]
+        h = ops.conv1d_q(h, p["w"].astype(jnp.float32), p["b"].astype(jnp.float32), fxp=fxp)
+        h = ops.cordic_activation(h, "relu")
+        h = _maxpool2(h)
+    h = h.reshape(h.shape[0], -1)
+    p = params["dense0"]
+    h = ops.quant_matmul_f32(h, p["w"].astype(jnp.float32), fxp=fxp) + p["b"]
+    h = ops.cordic_activation(h, "relu")
+    p = params["dense1"]
+    logits = ops.quant_matmul_f32(h, p["w"].astype(jnp.float32), fxp=fxp) + p["b"]
+    return ops.cordic_softmax(logits)
+
+
+def deviation_report(params: dict, x: jax.Array, cfg: CNNConfig) -> dict:
+    """Max probability deviation + decision agreement vs fp32 inference."""
+    from repro.models import cnn1d
+
+    ref = jax.nn.softmax(cnn1d.forward(params, x, cfg), axis=-1)
+    acc = accelerator_forward(params, x, cfg)
+    return {
+        "max_prob_dev": float(jnp.max(jnp.abs(ref - acc))),
+        "decision_agreement": float(jnp.mean(jnp.argmax(ref, -1) == jnp.argmax(acc, -1))),
+    }

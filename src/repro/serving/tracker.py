@@ -1,0 +1,93 @@
+"""Temporal tracking of UAV detections (the title's "Temporal Tracking").
+
+Continuous monitoring emits a per-window UAV probability every 0.8 s; raw
+thresholding chatters under noise.  The tracker smooths scores with an EMA
+and applies hysteresis (enter/exit thresholds) plus a minimum-duration
+filter, producing stable *events* (onset, offset, peak confidence) — the
+false-alarm behaviour that Fig. 5 measures is what the hysteresis
+suppresses.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TrackEvent:
+    onset_idx: int
+    offset_idx: int
+    peak_score: float
+    mean_score: float
+
+    @property
+    def duration(self) -> int:
+        return self.offset_idx - self.onset_idx + 1
+
+
+@dataclasses.dataclass
+class TemporalTracker:
+    ema_alpha: float = 0.4
+    enter_threshold: float = 0.65
+    exit_threshold: float = 0.35
+    min_duration: int = 2  # windows (>= 1.6 s of sustained detection)
+
+    def __post_init__(self):
+        self.reset()
+
+    def reset(self):
+        self._ema: Optional[float] = None
+        self._active = False
+        self._onset = 0
+        self._scores: list[float] = []
+        self._idx = -1
+        self.events: list[TrackEvent] = []
+
+    @property
+    def smoothed(self) -> float:
+        return self._ema if self._ema is not None else 0.0
+
+    def update(self, p_uav: float) -> dict:
+        """Feed one window's UAV probability; returns the tracker state."""
+        self._idx += 1
+        self._ema = (
+            p_uav
+            if self._ema is None
+            else self.ema_alpha * p_uav + (1 - self.ema_alpha) * self._ema
+        )
+        if not self._active and self._ema >= self.enter_threshold:
+            self._active = True
+            self._onset = self._idx
+            self._scores = []
+        if self._active:
+            self._scores.append(self._ema)
+            if self._ema <= self.exit_threshold:
+                self._close(self._idx - 1)
+        return {"idx": self._idx, "smoothed": self._ema, "active": self._active}
+
+    def _close(self, offset_idx: int):
+        self._active = False
+        if len(self._scores) - 1 >= self.min_duration:
+            scores = self._scores[:-1] or self._scores
+            self.events.append(
+                TrackEvent(
+                    onset_idx=self._onset,
+                    offset_idx=offset_idx,
+                    peak_score=float(np.max(scores)),
+                    mean_score=float(np.mean(scores)),
+                )
+            )
+
+    def finalize(self) -> list[TrackEvent]:
+        if self._active:
+            self._close(self._idx)
+        return self.events
+
+
+def track_stream(probs: Iterable[float], **kw) -> list[TrackEvent]:
+    tr = TemporalTracker(**kw)
+    for p in probs:
+        tr.update(float(p))
+    return tr.finalize()

@@ -1,0 +1,88 @@
+"""LM-scale train and serve steps (the jitted programs the dry-run lowers).
+
+train_step: gradient-accumulation scan over microbatches (bounds the
+fp32-logit working set under 200k+ vocabs), remat per block group, Adam in
+fp32 with states sharded like params, optional int8 gradient compression on
+the cross-pod (DCN) axis.
+
+serve steps: prefill (build sharded KV caches) and decode (single token).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as T
+from repro.training.optimizer import Adam, AdamState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    n_micro: int = 8
+    compress_pod_grads: bool = False  # int8 + error feedback on the DCN axis
+
+
+def make_train_step(
+    cfg: ArchConfig, opt: Adam, settings: TrainSettings = TrainSettings()
+) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state: AdamState, batch: dict):
+        n_micro = settings.n_micro
+        b = jax.tree_util.tree_leaves(batch)[0].shape[0]
+        assert b % n_micro == 0, (b, n_micro)
+
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape(n_micro, b // n_micro, *x.shape[1:]), batch
+        )
+
+        def loss_of(p, mb):
+            return T.loss_fn(p, mb, cfg)
+
+        def body(gsum, mb):
+            l, g = jax.value_and_grad(loss_of)(params, mb)
+            gsum = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(jnp.float32), gsum, g
+            )
+            return gsum, l
+
+        g0 = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        gsum, losses = jax.lax.scan(body, g0, micro)
+        grads = jax.tree_util.tree_map(lambda g: g / n_micro, gsum)
+        if settings.compress_pod_grads:
+            from repro.training.compression import fake_compress_grads
+
+            grads = fake_compress_grads(grads)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": losses.mean()}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, max_seq: int) -> Callable:
+    def prefill(params, batch: dict):
+        return T.forward_with_cache(params, batch, cfg, max_seq)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, max_seq: int) -> Callable:
+    def decode(params, token, caches, pos):
+        return T.decode_step(params, token, caches, pos, cfg, max_seq)
+
+    return decode
+
+
+def make_encoder_step(cfg: ArchConfig) -> Callable:
+    """Encoder-only 'serve' = full forward returning framewise logits."""
+
+    def encode(params, batch: dict):
+        return T.forward(params, batch, cfg)
+
+    return encode

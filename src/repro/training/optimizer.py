@@ -1,0 +1,82 @@
+"""Optimizers (pure JAX, no optax): Adam/AdamW with fp32 states + schedules.
+
+States are plain pytrees mirroring the parameter tree, so they inherit the
+parameter sharding under pjit (and can optionally be ZeRO-1 sharded over the
+data axis by the train-step's sharding rules).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Adam:
+    lr: float | Callable[[jax.Array], jax.Array] = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float | None = 1.0
+
+    def init(self, params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: AdamState, params):
+        """Returns (new_params, new_state)."""
+        if self.grad_clip_norm is not None:
+            gnorm = global_norm(grads)
+            scale = jnp.minimum(1.0, self.grad_clip_norm / (gnorm + 1e-9))
+            grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32), state.mu, grads)
+        nu = jax.tree_util.tree_map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)), state.nu, grads)
+        t = step.astype(jnp.float32)
+        mhat_scale = 1.0 / (1 - b1**t)
+        vhat_scale = 1.0 / (1 - b2**t)
+        lr = self._lr(step)
+
+        def upd(p, m, v):
+            delta = lr * (m * mhat_scale) / (jnp.sqrt(v * vhat_scale) + self.eps)
+            if self.weight_decay:
+                delta = delta + lr * self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - delta).astype(p.dtype)
+
+        new_params = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new_params, AdamState(step=step, mu=mu, nu=nu)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def cosine_warmup_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup -> cosine decay to floor*peak."""
+
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

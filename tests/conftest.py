@@ -1,0 +1,14 @@
+import os
+
+# Tests run on the single real CPU device.  The 512-device override belongs
+# ONLY to the dry-run process (repro.launch.dryrun sets it before jax import);
+# multi-device tests spawn subprocesses with their own XLA_FLAGS.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

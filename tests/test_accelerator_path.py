@@ -1,0 +1,34 @@
+"""End-to-end deployed-datapath inference (all Pallas kernels) vs fp32 JAX."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import cnn1d
+from repro.serving.accelerator import accelerator_forward, deviation_report
+
+
+def _setup():
+    cfg = cnn1d.CNNConfig(input_len=128, channels=(4, 8), hidden=8)
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    return cfg, params, x
+
+
+def test_accelerator_probs_valid():
+    cfg, params, x = _setup()
+    probs = accelerator_forward(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-5)
+    assert bool(jnp.all(probs >= 0))
+
+
+def test_accelerator_close_to_fp32():
+    cfg, params, x = _setup()
+    rep = deviation_report(params, x, cfg)
+    assert rep["max_prob_dev"] < 0.15, rep  # int8 end-to-end budget
+    assert rep["decision_agreement"] >= 0.875, rep
+
+
+def test_fxp8_mode_runs():
+    cfg, params, x = _setup()
+    probs = accelerator_forward(params, x, cfg, fxp=True)
+    assert bool(jnp.all(jnp.isfinite(probs)))

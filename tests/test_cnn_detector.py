@@ -1,0 +1,74 @@
+"""1D-F-CNN behaviour: shapes, precision modes, train-ability, tracking."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.precision_policy import Precision, PrecisionPolicy
+from repro.models import cnn1d
+from repro.serving.tracker import TemporalTracker, track_stream
+from repro.training import loop
+
+
+def test_canonical_flatten():
+    assert cnn1d.CANONICAL.flatten_size == 35_072
+    assert cnn1d.CANONICAL.n_frames == 137
+
+
+def test_forward_shapes_and_finite():
+    cfg = cnn1d.CNNConfig(input_len=128, channels=(4, 8), hidden=8)
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 128))
+    for prec in Precision:
+        out = cnn1d.forward(params, x, cfg, policy=PrecisionPolicy.uniform(prec))
+        assert out.shape == (3, 2)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_bf16_close_int8_moderate():
+    cfg = cnn1d.CNNConfig(input_len=128, channels=(4, 8), hidden=8)
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    base = cnn1d.forward(params, x, cfg)
+    bf = cnn1d.forward(params, x, cfg, policy=PrecisionPolicy.uniform(Precision.BF16))
+    i8 = cnn1d.forward(params, x, cfg, policy=PrecisionPolicy.uniform(Precision.INT8))
+    d_bf = float(jnp.max(jnp.abs(bf - base)))
+    d_i8 = float(jnp.max(jnp.abs(i8 - base)))
+    assert d_bf < d_i8 + 1e-6
+    assert d_bf < 0.1
+
+
+def test_detector_learns_separable_task():
+    rng = np.random.default_rng(0)
+    n, m = 384, 128
+    x = rng.standard_normal((n, m)).astype(np.float32)
+    y = rng.integers(0, 2, n).astype(np.int32)
+    x[y == 1, :16] += 4.0  # strong localized pattern
+    cfg = cnn1d.CNNConfig(input_len=m, channels=(4, 8), hidden=8, dropout=0.1)
+    res = loop.train_detector(x[:288], y[:288], x[288:], y[288:], cfg, epochs=25, batch=32, patience=25)
+    assert res.best_val_acc > 0.85
+
+
+def test_metrics_math():
+    logits = np.array([[0.0, 1.0], [1.0, 0.0], [0.0, 1.0], [1.0, 0.0]])
+    labels = np.array([1, 0, 0, 1])
+    m = loop.evaluate_logits(logits, labels)
+    assert m.accuracy == 0.5
+    assert m.false_alarm_rate == 0.5 and m.missed_detection_rate == 0.5
+
+
+def test_tracker_hysteresis_and_min_duration():
+    probs = [0.1, 0.2, 0.9, 0.9, 0.9, 0.2, 0.1, 0.95, 0.1, 0.1]
+    events = track_stream(probs, ema_alpha=1.0, min_duration=2)
+    assert len(events) == 1  # the single-window blip at idx 7 is rejected
+    assert events[0].onset_idx == 2
+    assert events[0].peak_score > 0.8
+
+
+def test_tracker_chatter_suppression():
+    rng = np.random.default_rng(0)
+    noisy = 0.5 + 0.3 * rng.standard_normal(200)
+    tr = TemporalTracker(ema_alpha=0.2, enter_threshold=0.75, exit_threshold=0.3)
+    for p in np.clip(noisy, 0, 1):
+        tr.update(float(p))
+    raw_crossings = int(np.sum(np.diff(noisy > 0.75)))
+    assert len(tr.finalize()) <= max(1, raw_crossings // 4)

@@ -1,0 +1,83 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [(8, 16, 8), (128, 128, 128), (64, 200, 96), (300, 512, 130), (1, 8704, 64), (17, 33, 65)],
+)
+def test_quant_matmul_exact(m, k, n):
+    """int8 x int8 -> int32 path is exact vs the oracle (no fp error)."""
+    xq = jnp.asarray(RNG.integers(-128, 128, (m, k)), jnp.int8)
+    wq = jnp.asarray(RNG.integers(-128, 128, (k, n)), jnp.int8)
+    xs = jnp.asarray(RNG.uniform(0.001, 0.1, (m, 1)), jnp.float32)
+    ws = jnp.asarray(RNG.uniform(0.001, 0.1, (1, n)), jnp.float32)
+    out = ops.quant_matmul(xq, wq, xs, ws)
+    exp = ref.quant_matmul_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-6, atol=1e-5)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(128, 128, 128), (64, 128, 256)])
+def test_quant_matmul_block_shapes(bm, bn, bk):
+    xq = jnp.asarray(RNG.integers(-128, 128, (200, 300)), jnp.int8)
+    wq = jnp.asarray(RNG.integers(-128, 128, (300, 100)), jnp.int8)
+    xs = jnp.ones((200, 1), jnp.float32)
+    ws = jnp.ones((1, 100), jnp.float32)
+    out = ops.quant_matmul(xq, wq, xs, ws, bm=bm, bn=bn, bk=bk)
+    exp = ref.quant_matmul_ref(xq, wq, xs, ws)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-6, atol=1e-5)
+
+
+def test_quant_matmul_f32_wrapper():
+    x = jnp.asarray(RNG.standard_normal((32, 64)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((64, 16)) * 0.1, jnp.float32)
+    out = ops.quant_matmul_f32(x, w)
+    rel = float(jnp.linalg.norm(out - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel < 0.02  # W8A8 quantisation error budget
+    out_fxp = ops.quant_matmul_f32(x, w, fxp=True)
+    rel_fxp = float(jnp.linalg.norm(out_fxp - x @ w) / jnp.linalg.norm(x @ w))
+    assert rel_fxp < 0.04 and rel_fxp >= rel * 0.5  # fxp slightly worse
+
+
+@pytest.mark.parametrize("mode", ["tanh", "sigmoid", "exp", "swish", "gelu", "selu", "relu"])
+@pytest.mark.parametrize("shape", [(1000,), (7, 129), (4, 37, 33)])
+def test_cordic_modes_shapes(mode, shape):
+    x = jnp.asarray(RNG.uniform(-6, 6, shape), jnp.float32)
+    y = ops.cordic_activation(x, mode)
+    expect = ref.ACT_REFS[mode](x)
+    assert y.shape == x.shape
+    if mode == "exp":
+        np.testing.assert_allclose(np.asarray(y), np.asarray(expect), rtol=3e-4, atol=1e-4)
+    else:
+        np.testing.assert_allclose(np.asarray(y), np.asarray(expect), atol=2e-3)
+
+
+def test_cordic_softmax():
+    x = jnp.asarray(RNG.uniform(-5, 5, (8, 64)), jnp.float32)
+    sm = ops.cordic_softmax(x)
+    np.testing.assert_allclose(np.asarray(sm.sum(-1)), 1.0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(sm), np.asarray(ref.softmax_ref(x)), atol=1e-4)
+
+
+def test_cordic_fixed_point_domain():
+    """Inputs beyond Q15.16 range still behave (clipping, saturation)."""
+    x = jnp.asarray([-100.0, -4.5, 4.5, 100.0])
+    y = ops.cordic_activation(x, "tanh")
+    np.testing.assert_allclose(np.asarray(y), [-1, -1, 1, 1], atol=1e-3)
+
+
+@pytest.mark.parametrize("b,l,cin,cout,k", [(2, 64, 8, 16, 3), (1, 33, 3, 5, 5)])
+def test_conv1d_q_shared_datapath(b, l, cin, cout, k):
+    x = jnp.asarray(RNG.standard_normal((b, l, cin)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((k, cin, cout)) * 0.2, jnp.float32)
+    bias = jnp.asarray(RNG.standard_normal(cout), jnp.float32)
+    out = ops.conv1d_q(x, w, bias)
+    expect = ref.conv1d_q_ref(x, w, bias)
+    rel = float(jnp.linalg.norm(out - expect) / jnp.linalg.norm(expect))
+    assert out.shape == expect.shape and rel < 0.03

@@ -1,0 +1,161 @@
+"""Per-architecture smoke tests (reduced configs) + serving consistency.
+
+Every assigned arch: one forward + one train step on CPU asserting shapes
+and finiteness; decoder archs additionally check prefill+decode against the
+full forward (with capacity_factor raised so MoE token-dropping cannot
+perturb the comparison)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, lm_arch_names
+from repro.models import transformer as T
+from repro.training.lm import TrainSettings, make_train_step
+from repro.training.optimizer import Adam
+
+ARCHS = lm_arch_names()
+
+
+def _batch(cfg, rng, B=2, S=32, train=False):
+    if cfg.frontend == "audio_frames":
+        b = {"frames": jax.random.normal(rng, (B, S, cfg.frontend_dim))}
+        lbl_len = S
+    elif cfg.frontend == "vision_patches":
+        b = {
+            "tokens": jax.random.randint(rng, (B, S - cfg.n_patches), 0, cfg.vocab),
+            "patches": jax.random.normal(rng, (B, cfg.n_patches, cfg.frontend_dim)),
+        }
+        lbl_len = S - cfg.n_patches
+    else:
+        b = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab)}
+        lbl_len = S
+    if train:
+        b["labels"] = jax.random.randint(rng, (B, lbl_len), 0, cfg.vocab)
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward(arch):
+    cfg = get_config(arch).smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    logits = T.forward(params, batch, cfg)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch).smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    opt = Adam(lr=1e-3)
+    opt_state = opt.init(params)
+    step = make_train_step(cfg, opt, TrainSettings(n_micro=2))
+    batch = _batch(cfg, jax.random.PRNGKey(1), train=True)
+    p2, o2, metrics = jax.jit(step)(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually moved
+    delta = max(
+        float(jnp.max(jnp.abs(a - b)))
+        for a, b in zip(jax.tree_util.tree_leaves(p2), jax.tree_util.tree_leaves(params))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCHS if a != "hubert-xlarge"])
+def test_prefill_decode_matches_forward(arch):
+    cfg = get_config(arch).smoke().replace(capacity_factor=16.0)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B, S, MAX = 2, 24, 40
+    rng = jax.random.PRNGKey(2)
+    tok = jax.random.randint(rng, (B, S + 2), 0, cfg.vocab)
+    batch = {"tokens": tok[:, :S]}
+    off = 0
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = jax.random.normal(rng, (B, cfg.n_patches, cfg.frontend_dim))
+        off = cfg.n_patches
+    full = T.forward(params, {**batch, "tokens": tok}, cfg)
+    last, caches = T.forward_with_cache(params, batch, cfg, MAX)
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0]), np.asarray(full[:, S - 1 + off]), rtol=2e-4, atol=2e-4
+    )
+    for i in range(2):  # two consecutive decode steps exercise cache updates
+        pos = jnp.asarray(S + i + off, jnp.int32)
+        lg, caches = T.decode_step(params, tok[:, S + i : S + i + 1], caches, pos, cfg, MAX)
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, S + i + off]), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_ring_cache_matches_full_window():
+    """Sliding-window decode with a ring cache == full forward, beyond the
+    window horizon (the long_500k mechanism)."""
+    cfg = get_config("h2o-danube-3-4b").smoke().replace(window=8)
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    B, S = 1, 20
+    tok = jax.random.randint(jax.random.PRNGKey(3), (B, S + 4), 0, cfg.vocab)
+    full = T.forward(params, {"tokens": tok}, cfg)
+    _, caches = T.forward_with_cache(params, {"tokens": tok[:, :S]}, cfg, max_seq=S + 4)
+    # ring cache buffer length == window
+    k0 = jax.tree_util.tree_leaves(caches)[0]
+    assert k0.shape[2] == 8
+    for i in range(4):
+        lg, caches = T.decode_step(
+            params, tok[:, S + i : S + i + 1], caches, jnp.asarray(S + i, jnp.int32), cfg, S + 4
+        )
+        np.testing.assert_allclose(
+            np.asarray(lg[:, 0]), np.asarray(full[:, S + i]), rtol=2e-3, atol=2e-3
+        )
+
+
+def test_scan_equals_unroll():
+    """The sequential shared-datapath execution (scan) is numerically the
+    unrolled program."""
+    cfg = get_config("gemma-2b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    a = T.forward(params, batch, cfg.replace(stack_mode="scan"))
+    b = T.forward(params, batch, cfg.replace(stack_mode="unroll"))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_unroll_attn_equals_scan_attn():
+    cfg = get_config("gemma-2b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    S = 2 * 1024 + 128  # force the chunked path (> ATTN_CHUNK)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)}
+    a = T.forward(params, batch, cfg)
+    b = T.forward(params, batch, cfg.replace(unroll_attn=True))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_zamba2_shared_block_is_shared():
+    cfg = get_config("zamba2-7b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    assert "shared" in params
+    # zero the shared attention weights -> every shared_attn block changes
+    z = jax.tree_util.tree_map(jnp.zeros_like, params["shared"])
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    base = T.forward(params, batch, cfg)
+    changed = T.forward({**params, "shared": z}, batch, cfg)
+    assert float(jnp.max(jnp.abs(base - changed))) > 1e-3
+
+
+def test_param_counts_match_published_scale():
+    """Full configs land near the published parameter counts."""
+    expected = {
+        "phi3.5-moe-42b-a6.6b": (40e9, 45e9),
+        "olmoe-1b-7b": (6e9, 8e9),
+        "phi4-mini-3.8b": (3.3e9, 4.3e9),
+        "gemma3-12b": (10e9, 13.5e9),
+        "h2o-danube-3-4b": (3.3e9, 4.2e9),
+        "gemma-2b": (2.2e9, 3.0e9),
+        "rwkv6-7b": (6.5e9, 8e9),
+        "zamba2-7b": (6.3e9, 8.3e9),
+        "hubert-xlarge": (0.85e9, 1.1e9),
+        "internvl2-1b": (0.4e9, 0.8e9),
+    }
+    for arch, (lo, hi) in expected.items():
+        n = T.param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9}, {hi/1e9}]B"

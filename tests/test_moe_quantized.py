@@ -1,0 +1,122 @@
+"""MoE dispatch semantics + LM quantisation feature + serving queue."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import ArchConfig
+from repro.models import moe as MOE
+from repro.models import transformer as T
+from repro.models.quantized import (
+    default_lm_policy,
+    quantize_lm_params,
+    quantized_fraction,
+)
+
+
+def _moe_cfg(**kw):
+    base = dict(
+        name="t", family="moe", n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+        head_dim=8, d_ff=32, vocab=64, pattern=("moe",), n_experts=4, top_k=2,
+        param_dtype="float32", act_dtype="float32", remat=False,
+    )
+    base.update(kw)
+    return ArchConfig(**base)
+
+
+class TestMoE:
+    def test_capacity_rounding(self):
+        cfg = _moe_cfg()
+        assert MOE.capacity(64, cfg) % 8 == 0
+        assert MOE.capacity(64, cfg) >= 64 * 2 / 4
+
+    def test_high_capacity_equals_dense_mixture(self):
+        """With no drops, scatter-dispatch MoE == explicit per-expert dense
+        computation weighted by the normalised top-k gates."""
+        cfg = _moe_cfg(capacity_factor=16.0)
+        from repro.models.layers import init_from_specs
+
+        p = init_from_specs(jax.random.PRNGKey(0), MOE.moe_specs(cfg), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 5, 16))
+        out = MOE.moe_fwd(p, x, cfg)
+
+        # reference: dense mixture
+        from repro.models.layers import rmsnorm
+
+        h = rmsnorm(p["norm"], x, cfg.norm_eps).reshape(10, 16)
+        logits = h @ p["router"]
+        probs = jax.nn.softmax(logits, -1)
+        gv, gi = jax.lax.top_k(probs, 2)
+        gv = gv / gv.sum(-1, keepdims=True)
+        expert_out = jnp.stack(
+            [
+                (jax.nn.silu(h @ p["wi_gate"][e]) * (h @ p["wi_up"][e])) @ p["wo"][e]
+                for e in range(4)
+            ]
+        )  # (E, T, D)
+        ref = jnp.zeros((10, 16))
+        for k in range(2):
+            ref += gv[:, k, None] * jnp.take_along_axis(
+                expert_out, gi[:, k][None, :, None], axis=0
+            )[0]
+        ref = x + ref.reshape(2, 5, 16)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=2e-4, atol=2e-4)
+
+    def test_capacity_drops_are_bounded(self):
+        """Tiny capacity drops tokens (residual passthrough) but never NaNs."""
+        cfg = _moe_cfg(capacity_factor=0.1)
+        specs = MOE.moe_specs(cfg)
+        from repro.models.layers import abstract_from_specs, init_from_specs
+
+        p = init_from_specs(jax.random.PRNGKey(0), specs, cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, 16))
+        out = MOE.moe_fwd(p, x, cfg)
+        assert bool(jnp.all(jnp.isfinite(out)))
+
+    def test_load_balance_loss(self):
+        logits = jnp.asarray(np.random.default_rng(0).standard_normal((64, 4)), jnp.float32)
+        gi = jnp.argmax(logits, -1)
+        lb = MOE.load_balance_loss(logits, gi, 4)
+        assert float(lb) >= 1.0 - 1e-3  # >= 1 with equality at perfect balance
+
+
+class TestQuantizedLM:
+    def test_policy_pins_sensitive(self):
+        cfg = get_config("rwkv6-7b").smoke()
+        pol = default_lm_policy(cfg)
+        assert pol.precision_for("groups/pos0/rwkv/w_lora_a").value == "bf16"
+        assert pol.precision_for("groups/pos0/rwkv/wr").value == "int8"
+        assert pol.precision_for("embed/tok").value == "bf16"
+
+    @pytest.mark.parametrize("arch", ["gemma-2b", "olmoe-1b-7b", "rwkv6-7b", "zamba2-7b"])
+    def test_quantized_forward_agrees(self, arch):
+        cfg = get_config(arch).smoke()
+        params = T.init_params(jax.random.PRNGKey(0), cfg)
+        qparams = quantize_lm_params(params, default_lm_policy(cfg))
+        # zamba2 smoke: the sensitivity policy pins mamba w_in (SSM dynamics)
+        # and the shared block dominates the tiny config -> lower floor
+        floor = 0.1 if arch == "zamba2-7b" else 0.3
+        assert quantized_fraction(qparams) > floor
+        batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0, cfg.vocab)}
+        a = T.forward(params, batch, cfg)
+        b = T.forward(qparams, batch, cfg)
+        agree = float(jnp.mean(jnp.argmax(a, -1) == jnp.argmax(b, -1)))
+        assert agree > 0.85, agree
+
+
+def test_batched_server_smoke():
+    from repro.launch.serve import BatchedServer, Request
+
+    cfg = get_config("gemma-2b").smoke()
+    params = T.init_params(jax.random.PRNGKey(0), cfg)
+    server = BatchedServer(cfg, params, batch_slots=2, max_seq=48)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, prompt=rng.integers(0, cfg.vocab, 6 + i).astype(np.int32), max_new=4)
+        for i in range(3)
+    ]
+    done = server.serve(reqs)
+    assert len(done) == 3
+    assert all(len(r.out) == 4 for r in done)
+    assert all((r.out >= 0).all() and (r.out < cfg.vocab).all() for r in done)

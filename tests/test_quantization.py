@@ -1,0 +1,129 @@
+"""Unit + property tests for the quantisation core (paper eqs. 4-8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+
+def arrays(min_size=8, max_size=256):
+    return st.lists(
+        st.floats(-8.0, 8.0, allow_nan=False, width=32), min_size=min_size, max_size=max_size
+    ).map(lambda v: jnp.asarray(np.array(v, np.float32)))
+
+
+class TestPwQ:
+    @settings(max_examples=30, deadline=None)
+    @given(arrays())
+    def test_reconstruction_error_bounded(self, w):
+        """PwQ at 8 bits reconstructs within the quantisation step size."""
+        q = Q.pwq_quantize(w, 8)
+        k = float(Q.pwq_scale(w, 8))
+        if k == 0:
+            return
+        lo, hi = Q.default_clip_bounds(w, 8)
+        step = (float(hi) - float(lo)) / 255.0 * k
+        assert float(jnp.max(jnp.abs(q - w))) <= step * 0.51 + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(arrays())
+    def test_more_bits_never_worse(self, w):
+        e8 = float(Q.pwq_error(w, 8))
+        e16 = float(Q.pwq_error(w, 16))
+        assert e16 <= e8 + 1e-5
+
+    def test_idempotent_on_levels(self):
+        w = jnp.linspace(-1, 1, 9)
+        q1 = Q.pwq_quantize(w, 8)
+        q2 = Q.pwq_quantize(q1, 8)
+        np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=2e-2)
+
+    def test_zero_tensor(self):
+        q = Q.pwq_quantize(jnp.zeros(16), 8)
+        assert float(jnp.max(jnp.abs(q))) == 0.0
+
+
+class TestPACT:
+    @settings(max_examples=30, deadline=None)
+    @given(arrays(), st.floats(0.5, 10.0))
+    def test_pact_is_clip(self, x, alpha):
+        """Paper eq. (7) == clip(x, 0, alpha)."""
+        a = jnp.asarray(alpha, jnp.float32)
+        np.testing.assert_allclose(
+            np.asarray(Q.pact(x, a)), np.clip(np.asarray(x), 0, alpha), rtol=1e-5, atol=1e-5
+        )
+
+    def test_quantized_levels(self):
+        a = jnp.asarray(6.0)
+        xq = Q.pact_quantize(jnp.linspace(-2, 8, 101), a, 8)
+        levels = np.asarray(xq) * 255.0 / 6.0
+        np.testing.assert_allclose(levels, np.round(levels), atol=1e-3)
+
+    def test_ste_gradient(self):
+        x = jnp.asarray([-1.0, 0.5, 3.0, 7.0])
+        a = jnp.asarray(6.0)
+        g = jax.grad(lambda xx: Q.pact_ste(xx, a, 8).sum())(x)
+        np.testing.assert_allclose(np.asarray(g), [0.0, 1.0, 1.0, 0.0])
+        ga = jax.grad(lambda aa: Q.pact_ste(x, aa, 8).sum())(a)
+        assert float(ga) == 1.0  # only x=7 >= alpha contributes
+
+
+class TestDeploymentQuant:
+    @settings(max_examples=20, deadline=None)
+    @given(arrays(min_size=16))
+    def test_int8_roundtrip_bound(self, w):
+        t = Q.int8_symmetric(w)
+        err = float(jnp.max(jnp.abs(t.dequantize() - w)))
+        assert err <= float(t.scale.max()) * 0.5 + 1e-6
+
+    @settings(max_examples=20, deadline=None)
+    @given(arrays(min_size=16))
+    def test_fxp8_scale_power_of_two(self, w):
+        t = Q.fxp8_quantize(w)
+        e = np.log2(float(t.scale.max()))
+        assert abs(e - round(e)) < 1e-5
+
+    @settings(max_examples=20, deadline=None)
+    @given(arrays(min_size=16))
+    def test_fxp8_scale_dominates_int8_scale(self, w):
+        """The FXP8 scale is the smallest power of two >= amax/127, hence
+        always >= the INT8 scale (the headroom loss).  (Pointwise error can
+        still be *lower* for dyadic-valued tensors — see the statistical
+        test below for the generic ordering.)"""
+        if float(jnp.max(jnp.abs(w))) == 0.0:
+            return
+        si = float(Q.int8_symmetric(w).scale)
+        sf = float(Q.fxp8_quantize(w).scale)
+        assert sf >= si - 1e-12
+
+    def test_fxp8_worse_than_int8_on_gaussians(self):
+        """Generic (continuous) weights: FXP8 MSE >= INT8 MSE, on average."""
+        rng = np.random.default_rng(0)
+        wins = 0
+        for _ in range(20):
+            w = jnp.asarray(rng.standard_normal(512) * rng.uniform(0.1, 3), jnp.float32)
+            ei = float(jnp.linalg.norm(Q.int8_symmetric(w).dequantize() - w))
+            ef = float(jnp.linalg.norm(Q.fxp8_quantize(w).dequantize() - w))
+            wins += ef >= ei
+        assert wins >= 18
+
+    def test_per_channel_scales(self):
+        w = jnp.stack([jnp.ones(8) * 0.01, jnp.ones(8) * 100.0], axis=1)
+        t = Q.int8_symmetric(w, axis=1)
+        assert t.scale.shape == (1, 2)
+        np.testing.assert_allclose(np.asarray(t.dequantize()), np.asarray(w), rtol=2e-2)
+
+    def test_bf16_roundtrip(self):
+        x = jnp.asarray([1.0, 1.0 + 2**-9])
+        r = Q.bf16_round(x)
+        assert float(r[0]) == 1.0
+        assert float(r[1]) != float(x[1])  # mantissa truncated
+
+    def test_precision_ordering_mse(self):
+        rng = np.random.default_rng(3)
+        w = jnp.asarray(rng.standard_normal(4096).astype(np.float32))
+        mses = {p: Q.quantization_mse(w, p) for p in Q.Precision}
+        assert mses[Q.Precision.FP32] == 0.0
+        assert mses[Q.Precision.BF16] < mses[Q.Precision.INT8] < mses[Q.Precision.FXP8] * 1.001

@@ -1,0 +1,216 @@
+"""Sharding rules, checkpoint/elastic restore, compression, pipeline."""
+import json
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed.sharding import DEFAULT_RULES, ShardingRules
+from repro.launch import hlo_analysis as H
+from repro.training import compression as C
+from repro.training.checkpoint import (
+    CheckpointManager,
+    latest_checkpoint,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.training.optimizer import Adam, cosine_warmup_schedule, global_norm
+
+
+class _FakeMesh:
+    """Duck-typed mesh: .axis_names + .shape mapping (enough for rules)."""
+
+    def __init__(self, shape: dict):
+        self._shape = shape
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return dict(self._shape)
+
+
+class TestShardingRules:
+    def test_divisibility_fallback(self):
+        r = ShardingRules.__new__(ShardingRules)
+        r.mesh = _FakeMesh({"data": 16, "model": 16})
+        r.rules = dict(DEFAULT_RULES)
+        r.fallbacks = []
+        spec = r.spec(("embed", "kv_heads", "head_dim"), dims=(2048, 8, 256))
+        assert spec == jax.sharding.PartitionSpec(None, None, None)
+        assert any("kv_heads" in f[0] for f in r.fallbacks)
+
+    def test_axis_dedup_first_come(self):
+        r = ShardingRules.__new__(ShardingRules)
+        r.mesh = _FakeMesh({"data": 16, "model": 16})
+        r.rules = dict(DEFAULT_RULES)
+        r.fallbacks = []
+        spec = r.spec(("experts", "embed", "mlp"), dims=(16, 4096, 6400))
+        assert spec == jax.sharding.PartitionSpec("model", None, None)
+
+    def test_multi_axis_batch(self):
+        r = ShardingRules.__new__(ShardingRules)
+        r.mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+        r.rules = dict(DEFAULT_RULES)
+        r.fallbacks = []
+        spec = r.spec(("batch", "seq"), dims=(256, 4096))
+        assert spec == jax.sharding.PartitionSpec(("pod", "data"), None)
+
+    def test_non_divisible_second_axis_partial(self):
+        r = ShardingRules.__new__(ShardingRules)
+        r.mesh = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+        r.rules = dict(DEFAULT_RULES)
+        r.fallbacks = []
+        # batch=8 divides pod(2) and data for 2*16=32? 8%32 != 0 -> keep pod only... 8%2==0, 8%(2*16)!=0
+        spec = r.spec(("batch",), dims=(8,))
+        assert spec == jax.sharding.PartitionSpec("pod")
+
+
+class TestHLOAnalysis:
+    HLO = textwrap.dedent(
+        """\
+        %body.1 (arg: (f32[8,128], f32[8,128])) -> (f32[8,128], f32[8,128]) {
+          %ar = f32[8,128]{1,0} all-reduce(f32[8,128]{1,0} %x), replica_groups={}
+        }
+        %cond.1 (arg: (f32[8,128], f32[8,128])) -> pred[] {
+        }
+        ENTRY %main (p: f32[8,128]) -> f32[8,128] {
+          %ag = f32[16,128]{1,0} all-gather(f32[8,128]{1,0} %p), dimensions={0}
+          %w = (f32[8,128], f32[8,128]) while(%t), condition=%cond.1, body=%body.1
+        }
+        """
+    )
+
+    def test_shape_bytes(self):
+        assert H.shape_bytes("f32[8,128]{1,0}") == 8 * 128 * 4
+        assert H.shape_bytes("(bf16[2,4], s8[8])") == 2 * 4 * 2 + 8
+
+    def test_collectives_with_loop_factors(self):
+        out = H.collective_bytes(self.HLO, loop_factors=[10.0])
+        # all-gather in entry: result 16*128*4 = 8192; all-reduce in body:
+        # 8*128*4 * 2 (wire factor) * 10 (loop factor)
+        assert out["per_op_bytes"]["all-gather"] == 8192.0
+        assert out["per_op_bytes"]["all-reduce"] == 8 * 128 * 4 * 2 * 10
+        assert out["counts"] == {"all-gather": 1, "all-reduce": 1}
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3), "b": {"c": jnp.ones(4)}}
+        save_checkpoint(tmp_path, 5, tree)
+        step, restored = restore_checkpoint(latest_checkpoint(tmp_path), tree)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(tree["a"]))
+
+    def test_atomic_no_partial(self, tmp_path):
+        tree = {"a": jnp.ones(3)}
+        save_checkpoint(tmp_path, 1, tree)
+        dirs = [p.name for p in tmp_path.iterdir()]
+        assert dirs == ["step_0000000001"]  # no .tmp_ leftovers
+
+    def test_retention_gc(self, tmp_path):
+        mgr = CheckpointManager(tmp_path, keep=2, save_every=1)
+        for s in range(1, 5):
+            mgr.save(s, {"a": jnp.ones(2) * s})
+        names = sorted(p.name for p in tmp_path.iterdir())
+        assert names == ["step_0000000003", "step_0000000004"]
+
+    def test_shape_mismatch_rejected(self, tmp_path):
+        save_checkpoint(tmp_path, 1, {"a": jnp.ones((2, 3))})
+        with pytest.raises(ValueError):
+            restore_checkpoint(latest_checkpoint(tmp_path), {"a": jnp.ones((3, 2))})
+
+    def test_elastic_restore_new_sharding(self, tmp_path):
+        """Checkpoint written unsharded restores onto an explicit sharding
+        (the mesh-rescale path)."""
+        tree = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+        save_checkpoint(tmp_path, 2, tree)
+        sh = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+        step, restored = restore_checkpoint(
+            latest_checkpoint(tmp_path), tree, shardings={"w": sh}
+        )
+        assert restored["w"].sharding == sh
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+    def test_maybe_restore_empty(self, tmp_path):
+        mgr = CheckpointManager(tmp_path / "none")
+        step, tree = mgr.maybe_restore({"a": jnp.zeros(1)})
+        assert step == 0
+
+
+class TestCompression:
+    def test_int8_roundtrip_error_bounded(self):
+        g = jnp.asarray(np.random.default_rng(0).standard_normal(1000), jnp.float32)
+        q, s = C.int8_compress(g)
+        err = float(jnp.max(jnp.abs(C.int8_decompress(q, s) - g)))
+        assert err <= float(s) * 0.5 + 1e-7
+
+    def test_error_feedback_removes_bias(self):
+        """With error feedback, the *accumulated* compressed signal tracks
+        the accumulated true signal (bias-free) — the convergence property."""
+        rng = np.random.default_rng(1)
+        err = jnp.zeros(64)
+        total_true = np.zeros(64)
+        total_sent = np.zeros(64)
+        for _ in range(200):
+            g = jnp.asarray(rng.standard_normal(64) * 0.01, jnp.float32)
+            q, s, err = C.compress_with_feedback(g, err)
+            total_true += np.asarray(g)
+            total_sent += np.asarray(C.int8_decompress(q, s))
+        # residual bounded by one quantisation step, not growing with T
+        assert np.max(np.abs(total_true - total_sent)) <= float(np.abs(err).max()) + 1e-5
+
+    def test_topk_roundtrip(self):
+        g = jnp.asarray(np.random.default_rng(2).standard_normal((8, 8)), jnp.float32)
+        vals, idx, shape = C.topk_compress(g, k_frac=0.25)
+        r = C.topk_decompress(vals, idx, shape)
+        assert r.shape == g.shape
+        assert float(jnp.abs(r).max()) == float(jnp.abs(g).max())
+
+
+class TestOptimizer:
+    def test_adam_matches_reference_step(self):
+        p = {"w": jnp.asarray([1.0, -2.0])}
+        g = {"w": jnp.asarray([0.1, -0.2])}
+        opt = Adam(lr=0.1, grad_clip_norm=None)
+        st = opt.init(p)
+        p2, st2 = opt.update(g, st, p)
+        # first Adam step == -lr * sign-ish update
+        m = 0.1 * np.array([0.1, -0.2])
+        v = 0.001 * np.array([0.01, 0.04])
+        expected = np.array([1.0, -2.0]) - 0.1 * (m / 0.1) / (np.sqrt(v / 0.001) + 1e-8)
+        np.testing.assert_allclose(np.asarray(p2["w"]), expected, rtol=1e-5)
+
+    def test_grad_clip(self):
+        p = {"w": jnp.ones(4)}
+        g = {"w": jnp.ones(4) * 100.0}
+        opt = Adam(lr=0.0, grad_clip_norm=1.0)
+        opt.update(g, opt.init(p), p)  # just exercises the path
+        assert float(global_norm(g)) > 1.0
+
+    def test_schedule_shape(self):
+        lr = cosine_warmup_schedule(1.0, warmup=10, total=100)
+        assert float(lr(jnp.asarray(0))) == 0.0
+        assert abs(float(lr(jnp.asarray(10))) - 1.0) < 1e-6
+        assert float(lr(jnp.asarray(100))) < 0.2
+
+
+def test_prefetch_loader():
+    from repro.data.pipeline import PrefetchingLoader, synthetic_lm_batches
+
+    make = synthetic_lm_batches(vocab=64, batch=2, seq=8, n_steps=3)
+    loader = PrefetchingLoader(make, prefetch=2)
+    batches = list(loader)
+    assert len(batches) == 3
+    assert batches[0]["tokens"].shape == (2, 8)
+    # deterministic across loaders
+    make2 = synthetic_lm_batches(vocab=64, batch=2, seq=8, n_steps=3)
+    b2 = list(PrefetchingLoader(make2, prefetch=1))
+    np.testing.assert_array_equal(np.asarray(batches[1]["tokens"]), np.asarray(b2[1]["tokens"]))

@@ -1,0 +1,62 @@
+"""Cycle-accurate timing model (eqs. 9-10) and resource model checks."""
+import math
+
+from repro.core import timing_model as TM
+from repro.models.cnn1d import CANONICAL, layer_macs
+
+
+def test_eq10_closed_form():
+    macs = {"l1": 40, "l2": 80, "l3": 120}
+    cfg = TM.DatapathConfig(mac_bank_width=4, piso=False)
+    r = TM.total_cycles_sequential(macs, flatten_size=0, cfg=cfg)
+    L = 3
+    assert r["total"] == (10 + 20 + 30) + 2 * L - 3
+
+
+def test_piso_serialisation_term():
+    macs = {"l1": 4}
+    a = TM.total_cycles_sequential(macs, flatten_size=1000)
+    b = TM.total_cycles_sequential(macs, flatten_size=0)
+    assert a["total"] - b["total"] == 1000
+
+
+def test_parallel_faster_than_sequential():
+    macs = layer_macs(CANONICAL)
+    p = TM.total_cycles_parallel(macs)
+    s = TM.total_cycles_sequential(macs, flatten_size=35072)
+    assert p["total"] < s["total"]
+
+
+def test_116ms_calibration():
+    ms = TM.shield8_latency(pruned=True)["seconds"] * 1e3
+    assert abs(ms - 116.0) < 1.0, ms
+
+
+def test_pruning_reduces_latency():
+    p = TM.shield8_latency(pruned=True)["seconds"]
+    u = TM.shield8_latency(pruned=False)["seconds"]
+    assert p < u
+
+
+def test_resource_row_matches_published():
+    r = TM.resource_estimate()
+    assert r["luts"] == 2268 and r["ffs"] == 3250 and r["bram_dsp"] == 8
+
+
+def test_resource_scales_with_bank_width():
+    r4 = TM.resource_estimate(TM.DatapathConfig(mac_bank_width=4))
+    r8 = TM.resource_estimate(TM.DatapathConfig(mac_bank_width=8))
+    assert r8["luts"] > r4["luts"]
+    # still far below the published parallel designs at W=8
+    assert r8["luts"] < TM.PUBLISHED_FPGA_RESOURCES["Layer-multiplexed [15]"]["luts"]
+
+
+def test_mac_bank_width_halves_cycles():
+    macs = {"l": 1000}
+    c2 = TM.total_cycles_sequential(macs, 0, TM.DatapathConfig(mac_bank_width=2))
+    c4 = TM.total_cycles_sequential(macs, 0, TM.DatapathConfig(mac_bank_width=4))
+    assert c2["per_layer"]["l"] == 2 * c4["per_layer"]["l"]
+
+
+def test_energy_model():
+    assert math.isclose(TM.energy_joules(0.116, 0.94), 0.109, rel_tol=1e-2)
