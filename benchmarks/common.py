@@ -1,9 +1,14 @@
-"""Shared benchmark utilities: timed jitted calls + CSV row emission."""
+"""Shared benchmark utilities: timed jitted calls, CSV row emission, and a
+machine-readable JSON sink (``BENCH_kernels.json``) so the perf trajectory
+is diffable across PRs."""
 from __future__ import annotations
 
+import json
 import time
 
 import jax
+
+_RECORDS: list[dict] = []
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
@@ -19,5 +24,26 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     return times[len(times) // 2] * 1e6
 
 
-def row(name: str, us_per_call: float | str, derived: str):
+def row(name: str, us_per_call: float | str, derived: str, **extra):
+    """Emit one CSV row and record it for the JSON sink.  ``extra`` keys
+    (e.g. ``speedup_vs``) land verbatim in the JSON record."""
     print(f"{name},{us_per_call},{derived}")
+    rec: dict = {"derived": derived, **extra}
+    try:
+        rec["median_us"] = round(float(us_per_call), 3)
+    except (TypeError, ValueError):
+        rec["median_us"] = None
+    _RECORDS.append({"name": name, **rec})
+
+
+def write_json(path: str = "BENCH_kernels.json", prefix: str = "kernels/") -> str:
+    """Persist every recorded row whose name starts with ``prefix``."""
+    data = {
+        r["name"]: {k: v for k, v in r.items() if k != "name"}
+        for r in _RECORDS
+        if r["name"].startswith(prefix)
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path

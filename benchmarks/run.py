@@ -38,6 +38,9 @@ def main() -> None:
             failures.append((name, e))
             print(f"{name}/ERROR,,{type(e).__name__}: {e}")
             traceback.print_exc()
+    # BENCH_kernels.json (fused vs im2col conv rows included) is written by
+    # bench_kernels.main itself — the single write site — so a failed section
+    # here never clobbers the committed perf trajectory with partial data.
     if failures:
         raise SystemExit(f"{len(failures)} benchmark sections failed")
 

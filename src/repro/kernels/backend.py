@@ -1,0 +1,19 @@
+"""Backend autodetection for the Pallas kernels.
+
+Every kernel wrapper takes ``interpret: bool | None``.  ``None`` (the
+default everywhere) resolves via :func:`resolve_interpret`: compiled on a
+real TPU, interpreter mode on every other backend (CPU containers, GPU
+hosts).  This is the single switch that lets the same datapath code run as
+the correctness twin in CI and as the compiled pipeline on hardware.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def resolve_interpret(interpret: bool | None = None) -> bool:
+    """Resolve an ``interpret`` flag: explicit values win, ``None`` means
+    "interpret unless we are actually on a TPU"."""
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return bool(interpret)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.backend import resolve_interpret
+
 F = 16  # fraction bits (Q15.16)
 ONE = 1 << F
 LN2 = float(np.log(2.0))
@@ -131,10 +133,11 @@ def cordic_activation(
     mode: str = "tanh",
     *,
     block: tuple[int, int] = (256, 128),
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Elementwise CORDIC activation over an arbitrary-shape fp32 tensor."""
     assert mode in MODES, mode
+    interpret = resolve_interpret(interpret)
     shape = x.shape
     flat = x.reshape(-1)
     bm, bn = block
@@ -154,7 +157,7 @@ def cordic_activation(
     return out.reshape(-1)[:n].reshape(shape)
 
 
-def cordic_softmax(x: jax.Array, axis: int = -1, interpret: bool = True) -> jax.Array:
+def cordic_softmax(x: jax.Array, axis: int = -1, interpret: bool | None = None) -> jax.Array:
     """Softmax with CORDIC exponentials (max-subtracted for stability)."""
     m = jax.lax.stop_gradient(jnp.max(x, axis=axis, keepdims=True))
     e = cordic_activation(x - m, "exp", interpret=interpret)

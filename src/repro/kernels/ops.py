@@ -3,7 +3,14 @@
 ``conv1d_q`` lowers the 1D convolution onto the quant_matmul kernel via
 im2col — convolution and dense layers literally share one MAC datapath,
 which is the paper's central architectural idea ("mapping convolutional and
-dense layers onto a shared compute fabric").
+dense layers onto a shared compute fabric").  ``conv1d_fused`` is the
+deployed successor: the im2col happens *inside* the kernel (shifted VMEM
+loads), with bias/ReLU fused into the dequant epilogue — same numerics, no
+(B*L, K*Cin) patch tensor in HBM.  ``conv1d_q`` is kept as the reference
+the fused path is signed off against.
+
+All wrappers take ``interpret=None``: autodetect via
+``repro.kernels.backend`` (compiled on TPU, interpreter elsewhere).
 """
 from __future__ import annotations
 
@@ -11,20 +18,36 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quantization import QTensor, fxp8_quantize, int8_symmetric
+from repro.kernels.backend import resolve_interpret  # noqa: F401
+from repro.kernels.conv1d_fused import conv1d_fused, conv1d_fused_q  # noqa: F401
 from repro.kernels.cordic_act import cordic_activation, cordic_softmax  # noqa: F401
 from repro.kernels.quant_matmul import quant_matmul  # noqa: F401
 
 
 def quant_matmul_f32(
-    x: jax.Array, w: jax.Array, *, fxp: bool = False, interpret: bool = True
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array | None = None,
+    *,
+    fxp: bool = False,
+    act: str | None = None,
+    clip: jax.Array | None = None,
+    interpret: bool | None = None,
 ) -> jax.Array:
     """Quantise fp32 operands (per-tensor act, per-column weight) and multiply
-    on the W8A8 kernel."""
+    on the W8A8 kernel, with the optional fused bias/ReLU/clip epilogue."""
     quant = fxp8_quantize if fxp else int8_symmetric
     xq: QTensor = quant(x, axis=None)
     wq: QTensor = quant(w, axis=1)
     return quant_matmul(
-        xq.q, wq.q, xq.scale.reshape(1, 1), wq.scale.reshape(1, -1), interpret=interpret
+        xq.q,
+        wq.q,
+        xq.scale.reshape(1, 1),
+        wq.scale.reshape(1, -1),
+        bias,
+        act=act,
+        clip=clip,
+        interpret=interpret,
     )
 
 
@@ -43,9 +66,10 @@ def conv1d_q(
     b: jax.Array | None = None,
     *,
     fxp: bool = False,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jax.Array:
-    """Quantised 'same' 1D convolution on the shared matmul datapath."""
+    """Quantised 'same' 1D convolution on the shared matmul datapath
+    (materialised-im2col reference path)."""
     bsz, l, cin = x.shape
     k, cin2, cout = w.shape
     assert cin == cin2

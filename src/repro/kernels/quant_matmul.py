@@ -10,6 +10,11 @@ Grid is (M/bm, N/bn, K/bk) with K innermost so each (m, n) output tile keeps
 its accumulator resident in VMEM across the K loop (weights-stationary within
 a tile, exactly the shared-datapath reuse discipline).  Tile sides are
 multiples of 128 to align with the 128x128 MXU.
+
+The dequant step doubles as the layer *epilogue*: an optional bias add,
+ReLU, and PACT-style clip are applied on the accumulator tile before the
+single fp32 store, so a full conv/dense layer needs exactly one HBM write
+instead of three (matmul out, bias out, activation out).
 """
 from __future__ import annotations
 
@@ -20,8 +25,17 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.backend import resolve_interpret
 
-def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
+
+def _kernel(x_ref, w_ref, xs_ref, ws_ref, *rest, act, has_bias, has_clip):
+    i = 0
+    b_ref = rest[i] if has_bias else None
+    i += has_bias
+    c_ref = rest[i] if has_clip else None
+    i += has_clip
+    o_ref, acc_ref = rest[i], rest[i + 1]
+
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -34,22 +48,41 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, o_ref, acc_ref):
 
     @pl.when(k == pl.num_programs(2) - 1)
     def _dequant():
-        o_ref[...] = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        y = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
+        if has_bias:
+            y = y + b_ref[...]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        if has_clip:
+            y = jnp.minimum(y, c_ref[0, 0])
+        o_ref[...] = y
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+)
 def quant_matmul(
     x_q: jax.Array,  # (M, K) int8
     w_q: jax.Array,  # (K, N) int8
     x_scale: jax.Array,  # (M, 1) or (1, 1) fp32
     w_scale: jax.Array,  # (1, N) or (1, 1) fp32
+    bias: jax.Array | None = None,  # (N,) or (1, N) fp32, fused epilogue add
     *,
+    act: str | None = None,  # None or "relu", fused on the accumulator tile
+    clip: jax.Array | None = None,  # scalar fp32 upper clip (PACT alpha)
     bm: int = 128,
     bn: int = 128,
     bk: int = 128,
-    interpret: bool = True,  # CPU container: interpret mode; False on real TPU
+    interpret: bool | None = None,  # None: autodetect (compiled on TPU)
 ) -> jax.Array:
-    """Dequantised fp32 product of int8 operands; pads to tile multiples."""
+    """Dequantised fp32 product of int8 operands; pads to tile multiples.
+
+    ``bias``/``act``/``clip`` form the fused epilogue: they are applied to
+    the int32 accumulator tile in VMEM right before the one dequant store,
+    never as a separate pass over the output in HBM.
+    """
+    assert act in (None, "relu"), act
+    interpret = resolve_interpret(interpret)
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
@@ -61,20 +94,33 @@ def quant_matmul(
     ws = jnp.broadcast_to(w_scale.astype(jnp.float32), (1, n))
     ws = jnp.pad(ws, ((0, 0), (0, np_ - n)), constant_values=1.0)
 
+    grid = (mp // bm, np_ // bn, kp // bk)
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+    ]
+    inputs = [x_q, w_q, xs, ws]
+    if bias is not None:
+        b = jnp.broadcast_to(bias.astype(jnp.float32).reshape(1, -1), (1, n))
+        inputs.append(jnp.pad(b, ((0, 0), (0, np_ - n))))
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+    if clip is not None:
+        inputs.append(jnp.asarray(clip, jnp.float32).reshape(1, 1))
+        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+
     out = pl.pallas_call(
-        _kernel,
-        grid=(mp // bm, np_ // bn, kp // bk),
-        in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
-        ],
+        functools.partial(
+            _kernel, act=act, has_bias=bias is not None, has_clip=clip is not None
+        ),
+        grid=grid,
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x_q, w_q, xs, ws)
+    )(*inputs)
     return out[:m, :n]
 
 

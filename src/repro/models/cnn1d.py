@@ -211,6 +211,16 @@ def calibrate_alphas(params: dict, x: jax.Array, cfg: CNNConfig = CANONICAL, pct
     return new
 
 
+def export_quantized(params: dict, cfg: CNNConfig = CANONICAL, *, mode: str = "int8"):
+    """Export a trained checkpoint as the deployment artifact: weights
+    quantised once for ``mode`` ("int8" | "fxp8"), ready for
+    ``repro.serving.accelerator.accelerator_forward``.  This is the
+    train → quantise once → serve handoff point."""
+    from repro.serving.quantized_params import quantize_params
+
+    return quantize_params(params, cfg, mode=mode)
+
+
 def count_params(params) -> int:
     return sum(int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params))
 

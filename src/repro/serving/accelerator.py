@@ -1,37 +1,96 @@
 """Deployed-datapath inference: the whole 1D-F-CNN through the Pallas kernels.
 
 This is the software twin of the POLARON accelerator's execution: every
-convolution and dense layer runs on the W8A8 quant_matmul kernel (conv via
-im2col on the shared MAC datapath), activations run through the fixed-point
-CORDIC unit, and the classifier head finishes with the CORDIC softmax.
-Against fp32 JAX inference this bounds the *accelerator's* end-to-end
-numerical deviation — the sign-off artifact an RTL team would diff against.
+convolution and dense layer runs on the W8A8 kernels — conv on the fused
+in-kernel-im2col conv kernel, dense on quant_matmul — with bias+ReLU fused
+into each layer's dequant epilogue, and the classifier head finishes with
+the CORDIC softmax.  Against fp32 JAX inference this bounds the
+*accelerator's* end-to-end numerical deviation — the sign-off artifact an
+RTL team would diff against.
+
+Weights come from a :class:`~repro.serving.quantized_params.QuantizedParams`
+artifact (quantised once per precision mode at deploy time); only the
+per-request activations are quantised per call.  The whole forward is one
+``jax.jit`` program, interpret-mode on CPU and compiled on TPU via the
+``interpret=None`` autodetect.
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.kernels.backend import resolve_interpret
 from repro.models.cnn1d import CNNConfig, _maxpool2
+from repro.serving.quantized_params import QuantizedParams, quantize_params
 
 
-def accelerator_forward(params: dict, x: jax.Array, cfg: CNNConfig, *, fxp: bool = False) -> jax.Array:
-    """x: (B, M) features -> (B, n_classes) class probabilities, computed
-    entirely on the kernel datapath (interpret mode on CPU)."""
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _forward_quantized(
+    qp: QuantizedParams, x: jax.Array, interpret: bool
+) -> jax.Array:
+    from repro.core.quantization import fxp8_quantize, int8_symmetric
+
+    quant = fxp8_quantize if qp.fxp else int8_symmetric
     h = x[:, :, None].astype(jnp.float32)
-    for i in range(len(cfg.channels)):
-        p = params[f"conv{i}"]
-        h = ops.conv1d_q(h, p["w"].astype(jnp.float32), p["b"].astype(jnp.float32), fxp=fxp)
-        h = ops.cordic_activation(h, "relu")
+    for layer in qp.convs:
+        hq = quant(h, axis=None)  # per-request activation quantisation
+        h = ops.conv1d_fused_q(
+            hq.q,
+            layer["w"].q,
+            hq.scale,
+            layer["w"].scale,
+            layer["b"],
+            act="relu",  # CORDIC ReLU == max(v, 0): fused into the epilogue
+            interpret=interpret,
+        )
         h = _maxpool2(h)
     h = h.reshape(h.shape[0], -1)
-    p = params["dense0"]
-    h = ops.quant_matmul_f32(h, p["w"].astype(jnp.float32), fxp=fxp) + p["b"]
-    h = ops.cordic_activation(h, "relu")
-    p = params["dense1"]
-    logits = ops.quant_matmul_f32(h, p["w"].astype(jnp.float32), fxp=fxp) + p["b"]
-    return ops.cordic_softmax(logits)
+    d0, d1 = qp.denses
+    hq = quant(h, axis=None)
+    h = ops.quant_matmul(
+        hq.q,
+        d0["w"].q,
+        hq.scale.reshape(1, 1),
+        d0["w"].scale.reshape(1, -1),
+        d0["b"],
+        act="relu",
+        interpret=interpret,
+    )
+    hq = quant(h, axis=None)
+    logits = ops.quant_matmul(
+        hq.q,
+        d1["w"].q,
+        hq.scale.reshape(1, 1),
+        d1["w"].scale.reshape(1, -1),
+        d1["b"],
+        interpret=interpret,
+    )
+    return ops.cordic_softmax(logits, interpret=interpret)
+
+
+def accelerator_forward(
+    params: dict | QuantizedParams,
+    x: jax.Array,
+    cfg: CNNConfig,
+    *,
+    fxp: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """x: (B, M) features -> (B, n_classes) class probabilities, computed
+    entirely on the kernel datapath.
+
+    Pass a :class:`QuantizedParams` artifact to serve from the weight cache
+    (zero weight-quantisation work per call); a raw fp32 ``params`` dict is
+    quantised on the fly (``fxp`` selects the mode) for one-off sign-offs.
+    """
+    if isinstance(params, QuantizedParams):
+        qp = params
+    else:
+        qp = quantize_params(params, cfg, mode="fxp8" if fxp else "int8")
+    return _forward_quantized(qp, x, resolve_interpret(interpret))
 
 
 def deviation_report(params: dict, x: jax.Array, cfg: CNNConfig) -> dict:

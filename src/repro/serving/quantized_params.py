@@ -1,0 +1,95 @@
+"""Pre-quantised parameter cache for the deployed datapath.
+
+The serving lifecycle is: train in fp32 → quantise the weights **once** per
+precision mode → serve every request against the cached int8 payloads.  The
+seed ``accelerator_forward`` re-ran ``int8_symmetric``/``fxp8_quantize`` on
+every weight tensor on every call; with millions of requests that is pure
+waste — weights only change on redeploy.  ``QuantizedParams`` is the frozen
+artifact (conv weights per-output-channel on axis 2, dense weights on axis
+1, biases kept fp32 for the epilogue adder), and ``QuantizedParamsCache``
+memoises one artifact per precision mode for a given fp32 checkpoint.
+
+``quantize_calls`` counts weight-tensor quantisations performed by this
+module — the test surface proving serving does zero per-call quantisation
+work.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.quantization import QTensor, fxp8_quantize, int8_symmetric
+from repro.models.cnn1d import CNNConfig
+
+MODES = ("int8", "fxp8")
+
+# Incremented once per weight tensor quantised; tests assert this stays flat
+# across serving calls.
+quantize_calls: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedParams:
+    """One precision mode's frozen weights for ``accelerator_forward``."""
+
+    mode: str  # "int8" | "fxp8" (static pytree aux data)
+    convs: tuple[dict, ...]  # each {"w": QTensor(K,Cin,Cout), "b": fp32}
+    denses: tuple[dict, ...]  # each {"w": QTensor(In,Out), "b": fp32}
+
+    @property
+    def fxp(self) -> bool:
+        return self.mode == "fxp8"
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedParams,
+    lambda p: ((p.convs, p.denses), p.mode),
+    lambda mode, kids: QuantizedParams(mode, kids[0], kids[1]),
+)
+
+
+def _quantize_weight(w: jax.Array, mode: str, axis: int) -> QTensor:
+    global quantize_calls
+    quantize_calls += 1
+    quant = fxp8_quantize if mode == "fxp8" else int8_symmetric
+    return quant(w.astype(jax.numpy.float32), axis=axis)
+
+
+def quantize_params(params: dict, cfg: CNNConfig, *, mode: str = "int8") -> QuantizedParams:
+    """Quantise a trained fp32 checkpoint into one mode's serving artifact."""
+    assert mode in MODES, mode
+    convs = tuple(
+        {
+            "w": _quantize_weight(params[f"conv{i}"]["w"], mode, axis=2),
+            "b": params[f"conv{i}"]["b"].astype(jax.numpy.float32),
+        }
+        for i in range(len(cfg.channels))
+    )
+    denses = tuple(
+        {
+            "w": _quantize_weight(params[name]["w"], mode, axis=1),
+            "b": params[name]["b"].astype(jax.numpy.float32),
+        }
+        for name in ("dense0", "dense1")
+    )
+    return QuantizedParams(mode=mode, convs=convs, denses=denses)
+
+
+class QuantizedParamsCache:
+    """Per-precision-mode memo over one fp32 checkpoint.
+
+    ``cache.get("int8")`` quantises on first use and returns the same
+    ``QuantizedParams`` object forever after — the train → quantise once →
+    serve lifecycle in one place.
+    """
+
+    def __init__(self, params: dict, cfg: CNNConfig):
+        self._params = params
+        self._cfg = cfg
+        self._by_mode: dict[str, QuantizedParams] = {}
+
+    def get(self, mode: str = "int8") -> QuantizedParams:
+        if mode not in self._by_mode:
+            self._by_mode[mode] = quantize_params(self._params, self._cfg, mode=mode)
+        return self._by_mode[mode]

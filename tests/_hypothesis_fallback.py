@@ -1,0 +1,73 @@
+"""Minimal stand-in for ``hypothesis`` when it is not installed.
+
+The tier-1 suite must collect and run on a bare container (no network, no
+dev extras).  This shim implements exactly the surface
+``test_quantization.py`` uses — ``given``, ``settings`` and the
+``st.lists``/``st.floats``/``.map`` strategy combinators — by running each
+property against a fixed batch of deterministic pseudo-random examples.
+With the real ``hypothesis`` installed (see requirements-dev.txt) the tests
+import it instead and get true shrinking/property search.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+
+import numpy as np
+
+_N_EXAMPLES = 12
+
+
+class _Strategy:
+    def __init__(self, gen):
+        self._gen = gen  # gen(rng) -> example value
+
+    def map(self, fn):
+        return _Strategy(lambda rng: fn(self._gen(rng)))
+
+
+def _floats(min_value=0.0, max_value=1.0, allow_nan=False, width=64, **_kw):
+    del allow_nan, width
+    return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+
+def _lists(elements: _Strategy, min_size=0, max_size=10, **_kw):
+    def gen(rng):
+        n = int(rng.integers(min_size, max_size + 1))
+        return [elements._gen(rng) for _ in range(n)]
+
+    return _Strategy(gen)
+
+
+st = types.SimpleNamespace(floats=_floats, lists=_lists)
+
+
+def settings(**_kw):
+    """No-op decorator factory (no deadline/max_examples machinery here)."""
+
+    def deco(fn):
+        return fn
+
+    return deco
+
+
+def given(*strategies: _Strategy):
+    """Run the wrapped test against ``_N_EXAMPLES`` deterministic draws."""
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            rng = np.random.default_rng(0)
+            for _ in range(_N_EXAMPLES):
+                drawn = tuple(s._gen(rng) for s in strategies)
+                fn(*args, *drawn, **kwargs)
+
+        # Hide the strategy-bound trailing parameters from pytest, which
+        # would otherwise look them up as fixtures.
+        params = list(inspect.signature(fn).parameters.values())
+        kept = params[: len(params) - len(strategies)]
+        wrapper.__signature__ = inspect.Signature(kept)
+        return wrapper
+
+    return deco

@@ -1,0 +1,119 @@
+"""Fused-vs-unfused parity: the fused conv kernel against the materialised
+im2col reference, and the QuantizedParams serving cache against the legacy
+quantise-per-call path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import fxp8_quantize, int8_symmetric
+from repro.kernels import ops
+from repro.kernels.conv1d_fused import conv1d_fused, conv1d_fused_q
+from repro.models import cnn1d
+from repro.serving import quantized_params as qpm
+from repro.serving.accelerator import accelerator_forward
+
+RNG = np.random.default_rng(7)
+
+SHAPES = [
+    (2, 64, 8, 16, 3),  # generic
+    (1, 33, 3, 5, 5),  # odd everything, wider tap
+    (2, 100, 1, 4, 3),  # Cin=1 (the detector's first layer)
+    (1, 137, 64, 64, 3),  # canonical post-pool frame count
+    (3, 16, 4, 4, 1),  # pointwise conv (no halo)
+]
+
+
+def _conv_case(b, l, cin, cout, k):
+    x = jnp.asarray(RNG.standard_normal((b, l, cin)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((k, cin, cout)) * 0.2, jnp.float32)
+    bias = jnp.asarray(RNG.standard_normal(cout), jnp.float32)
+    return x, w, bias
+
+
+@pytest.mark.parametrize("b,l,cin,cout,k", SHAPES)
+@pytest.mark.parametrize("fxp", [False, True])
+def test_int32_accumulators_bitwise(b, l, cin, cout, k, fxp):
+    """The in-kernel im2col reproduces the materialised im2col accumulators
+    bit for bit — integer math, no tolerance."""
+    x, w, _ = _conv_case(b, l, cin, cout, k)
+    quant = fxp8_quantize if fxp else int8_symmetric
+    xq, wq = quant(x, axis=None), quant(w, axis=2)
+    acc = conv1d_fused_q(xq.q, wq.q, xq.scale, wq.scale, return_acc=True)
+    patches = ops._im2col(xq.q.astype(jnp.float32), k).astype(jnp.int32)
+    wmat = wq.q.reshape(k * cin, cout).astype(jnp.int32)
+    expect = (patches @ wmat).reshape(b, l, cout)
+    assert acc.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(acc), np.asarray(expect))
+
+
+@pytest.mark.parametrize("b,l,cin,cout,k", SHAPES)
+@pytest.mark.parametrize("fxp", [False, True])
+def test_dequantised_matches_conv1d_q(b, l, cin, cout, k, fxp):
+    """Same int8 payloads + same dequant ordering => <=1e-5 fp32 agreement
+    with the im2col reference path."""
+    x, w, bias = _conv_case(b, l, cin, cout, k)
+    fused = conv1d_fused(x, w, bias, fxp=fxp)
+    reference = ops.conv1d_q(x, w, bias, fxp=fxp)
+    np.testing.assert_allclose(
+        np.asarray(fused), np.asarray(reference), atol=1e-5, rtol=1e-5
+    )
+
+
+def test_fused_epilogue_relu_clip():
+    x, w, bias = _conv_case(2, 64, 8, 16, 3)
+    alpha = jnp.asarray(0.5, jnp.float32)
+    fused = conv1d_fused(x, w, bias, act="relu", clip=alpha)
+    expect = jnp.minimum(jnp.maximum(ops.conv1d_q(x, w, bias), 0.0), alpha)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(expect), atol=1e-5)
+
+
+def test_quant_matmul_fused_epilogue():
+    x = jnp.asarray(RNG.standard_normal((32, 64)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((64, 16)) * 0.1, jnp.float32)
+    bias = jnp.asarray(RNG.standard_normal(16), jnp.float32)
+    fused = ops.quant_matmul_f32(x, w, bias, act="relu")
+    expect = jnp.maximum(ops.quant_matmul_f32(x, w) + bias, 0.0)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(expect), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# QuantizedParams cache parity + quantise-once guarantees
+# ---------------------------------------------------------------------------
+
+
+def _detector():
+    cfg = cnn1d.CNNConfig(input_len=128, channels=(4, 8), hidden=8)
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 128))
+    return cfg, params, x
+
+
+@pytest.mark.parametrize("mode", ["int8", "fxp8"])
+def test_cached_params_match_per_call_quantisation(mode):
+    cfg, params, x = _detector()
+    fxp = mode == "fxp8"
+    legacy = accelerator_forward(params, x, cfg, fxp=fxp)
+    cached = accelerator_forward(cnn1d.export_quantized(params, cfg, mode=mode), x, cfg)
+    np.testing.assert_allclose(np.asarray(cached), np.asarray(legacy), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(cached.sum(-1)), 1.0, atol=1e-5)
+
+
+def test_serving_does_zero_weight_quantisation_per_call():
+    """Weights are quantised exactly once per precision mode; serving calls
+    afterwards perform no weight-quantisation work at all."""
+    cfg, params, x = _detector()
+    cache = qpm.QuantizedParamsCache(params, cfg)
+
+    n_weights = len(cfg.channels) + 2
+    before = qpm.quantize_calls
+    qp_int8 = cache.get("int8")
+    assert qpm.quantize_calls - before == n_weights  # once per weight tensor
+    qp_fxp8 = cache.get("fxp8")
+    assert qpm.quantize_calls - before == 2 * n_weights  # once per mode
+
+    for _ in range(3):
+        accelerator_forward(qp_int8, x, cfg)
+        accelerator_forward(qp_fxp8, x, cfg)
+    assert qpm.quantize_calls - before == 2 * n_weights  # zero per call
+    assert cache.get("int8") is qp_int8  # memoised artifact, not re-built
