@@ -1,0 +1,91 @@
+"""Streaming monitor engine throughput/latency benchmark.
+
+Drives :class:`repro.serving.engine.MonitorEngine` with synthetic raw-audio
+streams at several concurrency levels and records aggregate windows/s and
+per-window latency into ``BENCH_serving.json`` (same row machinery as the
+kernel bench).  The model is the small detector shape on zcr features —
+interpret-mode kernel timings; the derived column notes the configuration so
+rows stay comparable across PRs.
+
+Set ``SMOKE=1`` to restrict to the smallest stream count.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import row, write_json
+from repro.data import features
+from repro.models import cnn1d
+from repro.serving.engine import MonitorEngine
+
+STREAM_COUNTS = (1, 8, 64)
+WINDOWS_PER_STREAM = 6
+BATCH_SLOTS = 8
+FEATURE = "zcr"
+
+
+def _smoke() -> bool:
+    return bool(os.environ.get("SMOKE"))
+
+
+def bench_monitor(n_streams: int, params, cfg) -> dict:
+    rng = np.random.default_rng(n_streams)
+    engine = MonitorEngine(
+        params, cfg,
+        n_streams=n_streams,
+        feature_kind=FEATURE,
+        batch_slots=BATCH_SLOTS,
+    )
+    audio = rng.standard_normal(
+        (n_streams, WINDOWS_PER_STREAM * features.N_SAMPLES)
+    ).astype(np.float32)
+
+    # Warmup: compile the fixed-slot forward once, outside the timed region.
+    engine.push(0, audio[0, : features.N_SAMPLES])
+    engine.drain()
+
+    t0 = time.perf_counter()
+    for s in range(n_streams):
+        off = features.N_SAMPLES if s == 0 else 0  # stream 0's warmup window
+        engine.push(s, audio[s, off:])
+    scored = engine.drain()
+    dt = time.perf_counter() - t0
+    engine.finalize()
+    n_win = len(scored)
+    return {
+        "windows": n_win,
+        "windows_per_s": n_win / dt,
+        "us_per_window": dt / n_win * 1e6,
+        "forward_calls": engine.forward_calls,
+        "padded_slots": engine.padded_slots,
+    }
+
+
+def main():
+    cfg = cnn1d.CNNConfig(
+        input_len=features.FEATURE_DIMS[FEATURE], channels=(4, 8), hidden=8
+    )
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    counts = STREAM_COUNTS[:1] if _smoke() else STREAM_COUNTS
+    for n in counts:
+        r = bench_monitor(n, params, cfg)
+        row(
+            f"serving/monitor_{n}streams_x{WINDOWS_PER_STREAM}win",
+            f"{r['us_per_window']:.0f}",
+            f"interpret-mode; {r['windows_per_s']:.1f} windows/s aggregate; "
+            f"{r['forward_calls']} forward calls ({BATCH_SLOTS} slots, "
+            f"{r['padded_slots']} padded); zcr features, small detector",
+            windows_per_s=round(r["windows_per_s"], 2),
+            n_streams=n,
+            batch_slots=BATCH_SLOTS,
+        )
+    if not _smoke():
+        write_json("BENCH_serving.json", prefix="serving/")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,10 @@
 #!/usr/bin/env bash
-# CI entrypoint: dev deps (best effort — the container may be offline),
-# tier-1 tests, then a ~30s kernel-benchmark smoke at the smallest shape.
+# CI entrypoint: dev deps (best effort — the container may be offline), the
+# fast test tier, then a ~30s benchmark smoke at the smallest shapes.
+#
+#   scripts/ci.sh         fast tier (-m "not slow"): < ~2 min
+#   scripts/ci.sh --all   full tier-1 suite incl. @slow kernel-parity /
+#                         multi-device / LM-architecture tests (~5-6 min)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -10,9 +14,14 @@ pip install -q -r requirements-dev.txt 2>/dev/null \
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-# Tier-1 verify (ROADMAP.md)
-python -m pytest -x -q
+MARK=(-m "not slow")
+if [[ "${1:-}" == "--all" ]]; then
+  MARK=()  # full tier-1 verify (ROADMAP.md)
+fi
+# ${MARK[@]+...}: empty-array expansion is fatal under `set -u` on bash < 4.4
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
 
-# Benchmark smoke: smallest shapes only, proves the kernel paths still run
-# end-to-end (does not touch the committed BENCH_kernels.json).
+# Benchmark smoke: smallest shapes only, proves the kernel + serving paths
+# still run end-to-end (does not touch the committed BENCH_*.json files).
 SMOKE=1 python -m benchmarks.bench_kernels
+SMOKE=1 python -m benchmarks.bench_serving

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import queue
 import threading
+import time
 from typing import Callable, Iterator, Optional
 
 import jax
@@ -38,15 +39,31 @@ class PrefetchingLoader:
         while not self._stop.is_set():
             batch = self._make(step)
             if batch is None:
-                self._q.put(None)
+                self._put(None)
                 return
             if self._sharding is not None:
                 batch = {
                     k: jax.device_put(v, self._sharding.get(k) if isinstance(self._sharding, dict) else self._sharding)
                     for k, v in batch.items()
                 }
-            self._q.put(batch)
+            if not self._put(batch):
+                return  # close() raced us while the queue was full
             step += 1
+
+    def _put(self, batch) -> bool:
+        """Enqueue, re-checking the stop flag while the queue is full.
+
+        A plain ``Queue.put`` blocks forever on a full queue, so a worker
+        parked there would never see ``close()`` set the flag — the shutdown
+        deadlock this timeout loop exists to break.
+        """
+        while not self._stop.is_set():
+            try:
+                self._q.put(batch, timeout=0.05)
+                return True
+            except queue.Full:
+                continue
+        return False
 
     def __iter__(self) -> Iterator[dict]:
         while True:
@@ -55,12 +72,33 @@ class PrefetchingLoader:
                 return
             yield batch
 
-    def close(self):
+    def close(self, timeout: float = 5.0):
+        """Stop the worker and join it; safe to call with a full queue.
+
+        Bounded: a ``make_batch`` stuck inside a blocking call cannot
+        observe the stop flag, so after ``timeout`` seconds the daemon
+        thread is abandoned rather than hanging shutdown forever.
+        """
         self._stop.set()
+        deadline = time.monotonic() + timeout
+        # Drain so a worker mid-`put` can cycle its timeout loop and exit.
+        while self._thread.is_alive() and time.monotonic() < deadline:
+            try:
+                while True:
+                    self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._thread.join(timeout=0.1)
+        # Discard anything enqueued after the last drain, then leave one
+        # sentinel so any consumer still iterating terminates cleanly.
         try:
             while True:
                 self._q.get_nowait()
         except queue.Empty:
+            pass
+        try:
+            self._q.put_nowait(None)
+        except queue.Full:
             pass
 
 

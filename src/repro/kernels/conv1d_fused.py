@@ -18,8 +18,8 @@ the ReLU.  This kernel keeps the whole layer inside the compute fabric:
   per layer instead of three.
 
 The layout contract matches ``conv1d_q``: activations (B, L, Cin) int8 with
-a per-tensor scale, weights (K, Cin, Cout) int8 with per-output-channel
-scales, 'same' zero padding.  ``return_acc=True`` skips the epilogue and
+a per-tensor *or per-sample* ((B,)-broadcastable) scale, weights
+(K, Cin, Cout) int8 with per-output-channel scales, 'same' zero padding.  ``return_acc=True`` skips the epilogue and
 returns the raw int32 accumulators — the bitwise sign-off surface against
 the im2col reference.
 """
@@ -84,7 +84,7 @@ def _kernel(xm_ref, xh_ref, w_ref, *rest, k, bl, act, has_bias, has_clip, return
 def conv1d_fused_q(
     x_q: jax.Array,  # (B, L, Cin) int8
     w_q: jax.Array,  # (K, Cin, Cout) int8
-    x_scale: jax.Array,  # scalar / (1, 1) fp32 per-tensor activation scale
+    x_scale: jax.Array,  # scalar (per-tensor) or (B,)-broadcastable (per-sample) fp32
     w_scale: jax.Array,  # (Cout,)-broadcastable fp32 per-channel weight scale
     bias: jax.Array | None = None,  # (Cout,) fp32, fused epilogue add
     *,
@@ -134,12 +134,18 @@ def conv1d_fused_q(
         ws = jnp.broadcast_to(
             w_scale.astype(jnp.float32).reshape(1, -1), (1, cout)
         )
+        # Activation scale: one scalar per batch row (a per-tensor scale is
+        # broadcast), so each grid step reads its own sample's dequant scale
+        # — this is what lets co-batched streams quantise independently.
+        xs = jnp.broadcast_to(
+            jnp.asarray(x_scale, jnp.float32).reshape(-1, 1), (b, 1)
+        )
         inputs += [
-            jnp.asarray(x_scale, jnp.float32).reshape(1, 1),
+            xs,
             jnp.pad(ws, ((0, 0), (0, cout_p - cout)), constant_values=1.0),
         ]
         in_specs += [
-            pl.BlockSpec((1, 1), lambda bb, i, j: (0, 0)),
+            pl.BlockSpec((1, 1), lambda bb, i, j: (bb, 0)),
             pl.BlockSpec((1, bn), lambda bb, i, j: (0, j)),
         ]
         if has_bias:

@@ -27,20 +27,28 @@ from repro.models.cnn1d import CNNConfig, _maxpool2
 from repro.serving.quantized_params import QuantizedParams, quantize_params
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "per_sample_acts"))
 def _forward_quantized(
-    qp: QuantizedParams, x: jax.Array, interpret: bool
+    qp: QuantizedParams, x: jax.Array, interpret: bool, per_sample_acts: bool
 ) -> jax.Array:
     from repro.core.quantization import fxp8_quantize, int8_symmetric
 
     quant = fxp8_quantize if qp.fxp else int8_symmetric
+    # Per-sample (row-wise) activation scales are the default: with one
+    # per-tensor scale, a single loud sample crushes the quantisation
+    # resolution of every co-batched quiet one — exactly the failure mode
+    # micro-batching windows from N independent streams triggers.  Row-wise
+    # scales also make every row's result independent of its co-batch, which
+    # is what the streaming engine's bitwise-parity guarantee rests on.
+    act_axis = 0 if per_sample_acts else None
+    bsz = x.shape[0]
     h = x[:, :, None].astype(jnp.float32)
     for layer in qp.convs:
-        hq = quant(h, axis=None)  # per-request activation quantisation
+        hq = quant(h, axis=act_axis)  # per-request activation quantisation
         h = ops.conv1d_fused_q(
             hq.q,
             layer["w"].q,
-            hq.scale,
+            hq.scale.reshape(-1, 1) if per_sample_acts else hq.scale,
             layer["w"].scale,
             layer["b"],
             act="relu",  # CORDIC ReLU == max(v, 0): fused into the epilogue
@@ -49,21 +57,21 @@ def _forward_quantized(
         h = _maxpool2(h)
     h = h.reshape(h.shape[0], -1)
     d0, d1 = qp.denses
-    hq = quant(h, axis=None)
+    hq = quant(h, axis=act_axis)
     h = ops.quant_matmul(
         hq.q,
         d0["w"].q,
-        hq.scale.reshape(1, 1),
+        hq.scale.reshape(bsz if per_sample_acts else 1, 1),
         d0["w"].scale.reshape(1, -1),
         d0["b"],
         act="relu",
         interpret=interpret,
     )
-    hq = quant(h, axis=None)
+    hq = quant(h, axis=act_axis)
     logits = ops.quant_matmul(
         hq.q,
         d1["w"].q,
-        hq.scale.reshape(1, 1),
+        hq.scale.reshape(bsz if per_sample_acts else 1, 1),
         d1["w"].scale.reshape(1, -1),
         d1["b"],
         interpret=interpret,
@@ -78,6 +86,7 @@ def accelerator_forward(
     *,
     fxp: bool = False,
     interpret: bool | None = None,
+    per_sample_acts: bool = True,
 ) -> jax.Array:
     """x: (B, M) features -> (B, n_classes) class probabilities, computed
     entirely on the kernel datapath.
@@ -85,20 +94,26 @@ def accelerator_forward(
     Pass a :class:`QuantizedParams` artifact to serve from the weight cache
     (zero weight-quantisation work per call); a raw fp32 ``params`` dict is
     quantised on the fly (``fxp`` selects the mode) for one-off sign-offs.
+
+    ``per_sample_acts`` (default) quantises activations with one scale per
+    batch row; ``False`` restores the legacy per-tensor scale (kept as the
+    A/B surface for the mixed-loudness regression tests).
     """
     if isinstance(params, QuantizedParams):
         qp = params
     else:
         qp = quantize_params(params, cfg, mode="fxp8" if fxp else "int8")
-    return _forward_quantized(qp, x, resolve_interpret(interpret))
+    return _forward_quantized(qp, x, resolve_interpret(interpret), per_sample_acts)
 
 
-def deviation_report(params: dict, x: jax.Array, cfg: CNNConfig) -> dict:
+def deviation_report(
+    params: dict, x: jax.Array, cfg: CNNConfig, *, per_sample_acts: bool = True
+) -> dict:
     """Max probability deviation + decision agreement vs fp32 inference."""
     from repro.models import cnn1d
 
     ref = jax.nn.softmax(cnn1d.forward(params, x, cfg), axis=-1)
-    acc = accelerator_forward(params, x, cfg)
+    acc = accelerator_forward(params, x, cfg, per_sample_acts=per_sample_acts)
     return {
         "max_prob_dev": float(jnp.max(jnp.abs(ref - acc))),
         "decision_agreement": float(jnp.mean(jnp.argmax(ref, -1) == jnp.argmax(acc, -1))),

@@ -1,0 +1,258 @@
+"""Multi-stream streaming detection engine (the paper's deployment scenario).
+
+The headline SHIELD8-UAV use case is *continuous* acoustic monitoring: raw
+microphone audio arrives as an unbounded stream, is cut into 0.8 s windows,
+each window is scored by the 1D-F-CNN on the W8A8 datapath, and the temporal
+tracker turns the per-window probabilities into stable detection events.
+This module scales that loop to N concurrent streams:
+
+* **per-stream ring buffers** (:class:`StreamRing`) absorb raw audio pushed
+  in arbitrary chunk sizes and emit hop-aligned 0.8 s windows;
+* **dynamic micro-batching** packs the ready windows of one round (at most
+  one per stream) into fixed-size slots of one jitted
+  :func:`~repro.serving.accelerator.accelerator_forward` program, padding
+  dead slots with silence exactly like ``launch/serve.py`` pads dead
+  requests — one compiled program regardless of how many streams are live;
+* a **vectorised tracker** (:class:`~repro.serving.tracker.VectorTemporalTracker`)
+  advances all N streams' EMA/hysteresis/min-duration state in one numpy
+  pass per round.
+
+Because the accelerator path quantises activations with *per-sample* scales,
+a window's probability is bitwise independent of whatever other streams it
+was co-batched with — streaming one window at a time, or 64 streams packed
+8 to a batch, produces the identical numbers (the streaming-parity tests pin
+this).  ``python -m repro.launch.monitor`` is the demo driver and
+``benchmarks/bench_serving.py`` the throughput harness on top of this class.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import features
+from repro.kernels.backend import resolve_interpret
+from repro.models.cnn1d import CNNConfig
+from repro.serving.accelerator import accelerator_forward
+from repro.serving.quantized_params import QuantizedParams, quantize_params
+from repro.serving.tracker import TrackEvent, VectorTemporalTracker
+
+
+class StreamRing:
+    """Fixed-capacity ring buffer over one stream's raw samples.
+
+    ``push`` accepts arbitrary chunk sizes; ``pop_window`` emits the next
+    hop-aligned window of ``window`` samples and advances the read head by
+    ``hop`` (overlapping windows when ``hop < window``).  On overflow the
+    oldest *whole hops* are dropped (keeping the stream hop-aligned) and
+    counted in ``dropped`` — an always-on monitor degrades, it never blocks.
+    """
+
+    def __init__(self, window: int, hop: int, capacity_windows: int = 8):
+        assert window > 0 and 0 < hop and capacity_windows >= 1
+        self.window = window
+        self.hop = hop
+        self.capacity = window + (capacity_windows - 1) * hop
+        self._buf = np.zeros(self.capacity, np.float32)
+        self._w = 0  # absolute count of samples written
+        self._r = 0  # absolute index of the next window's first sample
+        self.dropped = 0  # samples lost to overflow
+
+    @property
+    def ready(self) -> int:
+        """Number of complete windows currently extractable."""
+        avail = self._w - self._r
+        return 0 if avail < self.window else 1 + (avail - self.window) // self.hop
+
+    def push(self, samples: np.ndarray) -> int:
+        """Append raw audio; returns the number of samples dropped (0 unless
+        the buffer overflowed)."""
+        x = np.asarray(samples, np.float32).reshape(-1)
+        avail = self._w - self._r
+        total = avail + len(x)
+        dropped = 0
+        if total > self.capacity:
+            need = total - self.capacity
+            dropped = min(((need + self.hop - 1) // self.hop) * self.hop, total)
+            # Oldest first: consume buffered backlog, then (for a chunk
+            # bigger than the whole buffer) the incoming head passes through
+            # unrecorded — both read and write heads advance over it so the
+            # stream stays hop-aligned end to end.
+            drop_buffered = min(dropped, avail)
+            self._r += drop_buffered
+            skip = dropped - drop_buffered
+            self._w += skip
+            self._r += skip
+            x = x[skip:]
+            self.dropped += dropped
+        pos = self._w % self.capacity
+        first = min(len(x), self.capacity - pos)
+        self._buf[pos : pos + first] = x[:first]
+        self._buf[: len(x) - first] = x[first:]
+        self._w += len(x)
+        return dropped
+
+    def pop_window(self) -> np.ndarray | None:
+        """Next hop-aligned window, or None if fewer than ``window`` samples
+        are buffered."""
+        if self._w - self._r < self.window:
+            return None
+        idx = (self._r + np.arange(self.window)) % self.capacity
+        out = self._buf[idx].copy()
+        self._r += self.hop
+        return out
+
+
+@dataclasses.dataclass
+class WindowScore:
+    """One scored window: raw probability plus the tracker's view of it."""
+
+    stream: int
+    window_idx: int  # per-stream window index (tracker idx)
+    p_uav: float
+    smoothed: float
+    active: bool
+
+
+class MonitorEngine:
+    """N-stream continuous monitor over the quantised accelerator datapath.
+
+    ``push`` raw audio per stream in any chunking; each ``step`` scores at
+    most one ready window per stream (one *round*), micro-batched through
+    the jitted forward in fixed ``batch_slots`` chunks.  ``drain`` loops
+    until no stream has a complete window left; ``finalize`` flushes the
+    trackers and returns per-stream event lists.
+    """
+
+    def __init__(
+        self,
+        params: dict | QuantizedParams,
+        cfg: CNNConfig,
+        *,
+        n_streams: int,
+        feature_kind: str = "mfcc20",
+        hop_samples: int | None = None,
+        batch_slots: int = 8,
+        precision: str = "int8",
+        capacity_windows: int = 8,
+        interpret: bool | None = None,
+        ema_alpha: float = 0.4,
+        enter_threshold: float = 0.65,
+        exit_threshold: float = 0.35,
+        min_duration: int = 2,
+    ):
+        assert cfg.input_len == features.FEATURE_DIMS[feature_kind], (
+            f"model input_len {cfg.input_len} != "
+            f"{feature_kind} feature dim {features.FEATURE_DIMS[feature_kind]}"
+        )
+        assert n_streams >= 1 and batch_slots >= 1
+        self.cfg = cfg
+        self.n_streams = n_streams
+        self.feature_kind = feature_kind
+        self.batch_slots = batch_slots
+        self.window = features.N_SAMPLES
+        self.hop = hop_samples if hop_samples is not None else features.N_SAMPLES
+        self._interpret = resolve_interpret(interpret)
+        self._qp = (
+            params
+            if isinstance(params, QuantizedParams)
+            else quantize_params(params, cfg, mode=precision)
+        )
+        self._rings = [
+            StreamRing(self.window, self.hop, capacity_windows)
+            for _ in range(n_streams)
+        ]
+        self.tracker = VectorTemporalTracker(
+            n_streams,
+            ema_alpha=ema_alpha,
+            enter_threshold=enter_threshold,
+            exit_threshold=exit_threshold,
+            min_duration=min_duration,
+        )
+        # observability counters for the bench / driver
+        self.windows_scored = 0
+        self.forward_calls = 0
+        self.padded_slots = 0
+
+    # -- ingest --------------------------------------------------------------
+
+    def push(self, stream: int, samples: np.ndarray) -> int:
+        """Append raw audio to one stream; returns samples dropped (overflow)."""
+        return self._rings[stream].push(samples)
+
+    def ready_windows(self) -> np.ndarray:
+        """Per-stream count of complete, unscored windows."""
+        return np.array([r.ready for r in self._rings], np.int64)
+
+    @property
+    def dropped_samples(self) -> int:
+        return sum(r.dropped for r in self._rings)
+
+    # -- scoring -------------------------------------------------------------
+
+    def _forward(self, feats: np.ndarray) -> np.ndarray:
+        """Micro-batch (n, M) features through fixed-size jit slots."""
+        n = len(feats)
+        probs = np.empty((n, self.cfg.n_classes), np.float32)
+        for start in range(0, n, self.batch_slots):
+            chunk = feats[start : start + self.batch_slots]
+            block = np.zeros((self.batch_slots, self.cfg.input_len), np.float32)
+            block[: len(chunk)] = chunk  # dead slots carry silence
+            out = accelerator_forward(
+                self._qp,
+                jnp.asarray(block),
+                self.cfg,
+                interpret=self._interpret,
+            )
+            probs[start : start + len(chunk)] = np.asarray(out)[: len(chunk)]
+            self.forward_calls += 1
+            self.padded_slots += self.batch_slots - len(chunk)
+        return probs
+
+    def step(self) -> list[WindowScore]:
+        """Score one round: at most one ready window per stream.
+
+        Returns the per-window scores of this round (empty when no stream
+        had a complete window buffered).
+        """
+        ids: list[int] = []
+        wins: list[np.ndarray] = []
+        for s, ring in enumerate(self._rings):
+            w = ring.pop_window()
+            if w is not None:
+                ids.append(s)
+                wins.append(w)
+        if not ids:
+            return []
+        feats = features.batch_features(np.stack(wins), self.feature_kind)
+        p_uav = self._forward(feats)[:, 1]
+        full = np.zeros(self.n_streams, np.float64)
+        mask = np.zeros(self.n_streams, bool)
+        full[ids] = p_uav  # exact float32 -> float64 widening
+        mask[ids] = True
+        state = self.tracker.update(full, mask)
+        self.windows_scored += len(ids)
+        return [
+            WindowScore(
+                stream=s,
+                window_idx=int(state["idx"][s]),
+                p_uav=float(full[s]),
+                smoothed=float(state["smoothed"][s]),
+                active=bool(state["active"][s]),
+            )
+            for s in ids
+        ]
+
+    def drain(self) -> list[WindowScore]:
+        """Run rounds until every buffered window has been scored."""
+        out: list[WindowScore] = []
+        while True:
+            scored = self.step()
+            if not scored:
+                return out
+            out.extend(scored)
+
+    def finalize(self) -> list[list[TrackEvent]]:
+        """Flush still-open tracks; returns per-stream event lists."""
+        return self.tracker.finalize()

@@ -31,6 +31,7 @@ def _conv_case(b, l, cin, cout, k):
     return x, w, bias
 
 
+@pytest.mark.slow  # full shape sweep; the epilogue/per-sample tests below keep fast-tier coverage
 @pytest.mark.parametrize("b,l,cin,cout,k", SHAPES)
 @pytest.mark.parametrize("fxp", [False, True])
 def test_int32_accumulators_bitwise(b, l, cin, cout, k, fxp):
@@ -47,6 +48,7 @@ def test_int32_accumulators_bitwise(b, l, cin, cout, k, fxp):
     np.testing.assert_array_equal(np.asarray(acc), np.asarray(expect))
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("b,l,cin,cout,k", SHAPES)
 @pytest.mark.parametrize("fxp", [False, True])
 def test_dequantised_matches_conv1d_q(b, l, cin, cout, k, fxp):
@@ -58,6 +60,23 @@ def test_dequantised_matches_conv1d_q(b, l, cin, cout, k, fxp):
     np.testing.assert_allclose(
         np.asarray(fused), np.asarray(reference), atol=1e-5, rtol=1e-5
     )
+
+
+def test_per_sample_activation_scales_match_per_row_calls():
+    """A (B,)-vector activation scale dequantises each batch row with its own
+    scale: the batched call must equal B independent single-row calls."""
+    x, w, bias = _conv_case(3, 32, 4, 8, 3)
+    wq = int8_symmetric(w, axis=2)
+    # quantise every row independently (what per-sample serving does)
+    rows = [int8_symmetric(x[i], axis=None) for i in range(x.shape[0])]
+    xq = jnp.stack([r.q for r in rows])
+    xs = jnp.stack([r.scale for r in rows]).reshape(-1, 1)
+    batched = conv1d_fused_q(xq, wq.q, xs, wq.scale, bias, act="relu")
+    for i, r in enumerate(rows):
+        single = conv1d_fused_q(
+            r.q[None], wq.q, r.scale, wq.scale, bias, act="relu"
+        )
+        np.testing.assert_array_equal(np.asarray(batched[i]), np.asarray(single[0]))
 
 
 def test_fused_epilogue_relu_clip():

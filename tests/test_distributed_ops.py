@@ -8,6 +8,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight tier: scripts/ci.sh --all
+
 ROOT = Path(__file__).resolve().parents[1]
 
 A2A_SCRIPT = textwrap.dedent(

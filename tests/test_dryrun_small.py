@@ -8,6 +8,8 @@ from pathlib import Path
 
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight tier: scripts/ci.sh --all
+
 SCRIPT = textwrap.dedent(
     """\
     import os

@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight tier: scripts/ci.sh --all
+
 from repro.configs import get_config, lm_arch_names
 from repro.models import transformer as T
 from repro.training.lm import TrainSettings, make_train_step

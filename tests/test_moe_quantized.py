@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # heavyweight tier: scripts/ci.sh --all
+
 from repro.configs import get_config
 from repro.configs.base import ArchConfig
 from repro.models import moe as MOE

@@ -1,0 +1,53 @@
+"""PrefetchingLoader lifecycle: the shutdown-deadlock regression.
+
+The seed worker blocked forever in ``Queue.put`` once the queue filled, and
+``close()`` only set a stop flag the worker could never reach — so shutdown
+hung any caller that hadn't drained the queue first.
+"""
+import time
+
+import numpy as np
+
+from repro.data.pipeline import PrefetchingLoader
+
+
+def _batch(step: int) -> dict:
+    return {"x": np.full(4, step, np.float32)}
+
+
+def test_close_returns_promptly_with_full_queue():
+    """Regression: close() must unblock a worker parked in put() and join it."""
+    ld = PrefetchingLoader(_batch, prefetch=2)
+    deadline = time.time() + 5.0
+    while ld._q.qsize() < 2 and time.time() < deadline:
+        time.sleep(0.01)  # let the prefetch queue fill; worker now blocks
+    t0 = time.perf_counter()
+    ld.close()
+    assert time.perf_counter() - t0 < 2.0
+    assert not ld._thread.is_alive()
+
+
+def test_close_idempotent_and_iter_terminates_after_close():
+    ld = PrefetchingLoader(_batch, prefetch=1)
+    time.sleep(0.05)
+    ld.close()
+    ld.close()
+    assert list(ld) == []  # sentinel left behind ends any late consumer
+
+
+def test_finite_stream_yields_all_batches_then_ends():
+    n = 5
+    ld = PrefetchingLoader(lambda s: _batch(s) if s < n else None, prefetch=2)
+    got = [int(b["x"][0]) for b in ld]
+    assert got == list(range(n))
+    ld.close()
+    assert not ld._thread.is_alive()
+
+
+def test_batches_arrive_in_order_while_consuming():
+    ld = PrefetchingLoader(_batch, prefetch=3)
+    it = iter(ld)
+    got = [int(next(it)["x"][0]) for _ in range(10)]
+    assert got == list(range(10))
+    ld.close()
+    assert not ld._thread.is_alive()

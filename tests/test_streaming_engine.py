@@ -1,0 +1,172 @@
+"""Streaming monitor engine: ring buffers, micro-batching, and the central
+parity guarantee — windows streamed one at a time through the engine produce
+bitwise-identical probabilities and identical track events to one batched
+``accelerator_forward`` + scalar tracker over the same windows.
+
+That guarantee rests on per-sample activation scales (each row quantises
+independently of its co-batch), so this file is also the regression surface
+for the per-tensor-scale bug.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import features
+from repro.models import cnn1d
+from repro.serving.accelerator import accelerator_forward
+from repro.serving.engine import MonitorEngine, StreamRing
+from repro.serving.tracker import track_stream
+
+TRACK_KW = dict(ema_alpha=0.7, enter_threshold=0.02, exit_threshold=0.01, min_duration=1)
+
+
+def _small_detector():
+    cfg = cnn1d.CNNConfig(
+        input_len=features.FEATURE_DIMS["zcr"], channels=(4, 8), hidden=8
+    )
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# StreamRing
+# ---------------------------------------------------------------------------
+
+
+def test_ring_hop_aligned_windows():
+    r = StreamRing(window=10, hop=10, capacity_windows=3)
+    assert r.push(np.arange(7)) == 0
+    assert r.ready == 0 and r.pop_window() is None
+    r.push(np.arange(7, 25))
+    assert r.ready == 2
+    np.testing.assert_array_equal(r.pop_window(), np.arange(10))
+    np.testing.assert_array_equal(r.pop_window(), np.arange(10, 20))
+    assert r.pop_window() is None
+    r.push(np.arange(25, 30))
+    np.testing.assert_array_equal(r.pop_window(), np.arange(20, 30))
+
+
+def test_ring_overlapping_hop():
+    r = StreamRing(window=10, hop=5, capacity_windows=4)
+    r.push(np.arange(20))
+    assert r.ready == 3
+    np.testing.assert_array_equal(r.pop_window(), np.arange(10))
+    np.testing.assert_array_equal(r.pop_window(), np.arange(5, 15))
+    np.testing.assert_array_equal(r.pop_window(), np.arange(10, 20))
+
+
+def test_ring_wraparound_many_times():
+    r = StreamRing(window=8, hop=8, capacity_windows=2)
+    expect = 0
+    for chunk in range(40):
+        r.push(np.arange(expect + 0, expect + 0 + 8) % 1000)
+        w = r.pop_window()
+        np.testing.assert_array_equal(w, np.arange(expect, expect + 8) % 1000)
+        expect += 8
+    assert r.dropped == 0
+
+
+def test_ring_overflow_drops_oldest_hops():
+    r = StreamRing(window=10, hop=10, capacity_windows=2)
+    r.push(np.zeros(20))
+    assert r.push(np.ones(10)) == 10  # oldest window dropped, hop-aligned
+    assert r.dropped == 10 and r.ready == 2
+    np.testing.assert_array_equal(r.pop_window(), np.zeros(10))
+    np.testing.assert_array_equal(r.pop_window(), np.ones(10))
+
+
+def test_ring_giant_push_keeps_tail():
+    r = StreamRing(window=10, hop=10, capacity_windows=2)
+    dropped = r.push(np.arange(55))
+    assert dropped == 40  # hop-aligned tail survives
+    np.testing.assert_array_equal(r.pop_window(), np.arange(40, 50))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+def test_engine_rejects_mismatched_feature_dim():
+    cfg, params = _small_detector()
+    with pytest.raises(AssertionError):
+        MonitorEngine(params, cfg, n_streams=1, feature_kind="mfcc20")
+
+
+def test_streaming_parity_bitwise_probs_and_events():
+    """The acceptance-criteria test: uneven chunked delivery through the
+    engine == one batched forward + scalar tracker, bitwise/exactly."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(5)
+    n_streams, n_win = 3, 5
+    audio = rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+
+    engine = MonitorEngine(
+        params, cfg, n_streams=n_streams, feature_kind="zcr",
+        batch_slots=2, **TRACK_KW,
+    )
+    cursors = [0] * n_streams
+    scores: dict[int, list[float]] = {s: [] for s in range(n_streams)}
+    while any(c < audio.shape[1] for c in cursors):
+        for s in range(n_streams):
+            n = int(rng.uniform(0.2, 1.9) * features.N_SAMPLES)
+            engine.push(s, audio[s, cursors[s] : cursors[s] + n])
+            cursors[s] += n
+        for ws in engine.step():
+            scores[ws.stream].append(ws.p_uav)
+    for ws in engine.drain():
+        scores[ws.stream].append(ws.p_uav)
+    events = engine.finalize()
+    assert engine.dropped_samples == 0
+
+    total_events = 0
+    for s in range(n_streams):
+        feats = features.batch_features(
+            audio[s].reshape(n_win, features.N_SAMPLES), "zcr"
+        )
+        # One batched forward over the whole stream at a different batch
+        # size: per-sample activation scales make each row's result
+        # independent of its co-batch.
+        probs = np.asarray(accelerator_forward(params, jnp.asarray(feats), cfg))[:, 1]
+        got = np.asarray(scores[s], np.float64)
+        assert len(got) == n_win
+        np.testing.assert_array_equal(got, probs.astype(np.float64))
+        ref_events = track_stream(probs, **TRACK_KW)
+        assert events[s] == ref_events
+        total_events += len(ref_events)
+    assert total_events > 0  # thresholds chosen so events actually occur
+
+
+def test_engine_micro_batching_pads_dead_slots():
+    cfg, params = _small_detector()
+    engine = MonitorEngine(
+        params, cfg, n_streams=5, feature_kind="zcr", batch_slots=4
+    )
+    rng = np.random.default_rng(0)
+    for s in range(5):
+        engine.push(s, rng.standard_normal(features.N_SAMPLES).astype(np.float32))
+    scored = engine.step()
+    assert len(scored) == 5
+    # 5 ready windows / 4 slots -> two forward calls, 3 padded slots
+    assert engine.forward_calls == 2
+    assert engine.padded_slots == 3
+    assert engine.step() == []  # nothing left buffered
+
+
+def test_engine_serves_from_quantized_artifact():
+    """Engine construction from a pre-quantised artifact does zero extra
+    weight-quantisation work at serve time."""
+    from repro.serving import quantized_params as qpm
+
+    cfg, params = _small_detector()
+    qp = cnn1d.export_quantized(params, cfg, mode="int8")
+    engine = MonitorEngine(qp, cfg, n_streams=2, feature_kind="zcr")
+    before = qpm.quantize_calls
+    rng = np.random.default_rng(1)
+    for s in range(2):
+        engine.push(s, rng.standard_normal(2 * features.N_SAMPLES).astype(np.float32))
+    assert len(engine.drain()) == 4
+    assert qpm.quantize_calls == before  # weights untouched while serving

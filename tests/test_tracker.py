@@ -1,0 +1,141 @@
+"""TemporalTracker bookkeeping regressions + scalar/vector agreement.
+
+The seed tracker had two event-bookkeeping bugs this file pins down:
+
+1. ``_close()`` always dropped the last smoothed score, even from
+   ``finalize()`` where the final window is genuinely active — peak/mean
+   excluded a valid window and the offset's score went missing.
+2. The duration gate (``len(scores) - 1 >= min_duration``) disagreed with
+   ``TrackEvent.duration = offset - onset + 1`` on the finalize path, so
+   still-active events of exactly ``min_duration`` windows were dropped.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.tracker import (
+    TemporalTracker,
+    TrackEvent,
+    VectorTemporalTracker,
+    track_stream,
+)
+
+KW = dict(ema_alpha=1.0, enter_threshold=0.65, exit_threshold=0.35, min_duration=2)
+
+
+def test_finalize_keeps_final_active_window():
+    """A stream that ends while tracking closes inclusively: the last window
+    belongs to the event and contributes to peak/mean."""
+    events = track_stream([0.1, 0.7, 0.8, 0.95], **KW)
+    assert events == [
+        TrackEvent(onset_idx=1, offset_idx=3, peak_score=0.95,
+                   mean_score=(0.7 + 0.8 + 0.95) / 3)
+    ]
+    assert events[0].duration == 3
+
+
+def test_finalize_event_of_exactly_min_duration_kept():
+    """Regression: duration gate must agree with TrackEvent.duration."""
+    events = track_stream([0.1, 0.7, 0.9], **KW)
+    assert events == [
+        TrackEvent(onset_idx=1, offset_idx=2, peak_score=0.9,
+                   mean_score=(0.7 + 0.9) / 2)
+    ]
+    assert events[0].duration == 2
+
+
+def test_update_close_event_of_exactly_min_duration_kept():
+    events = track_stream([0.7, 0.9, 0.1, 0.1], **KW)
+    assert events == [
+        TrackEvent(onset_idx=0, offset_idx=1, peak_score=0.9,
+                   mean_score=(0.7 + 0.9) / 2)
+    ]
+
+
+def test_exit_window_excluded_from_event_stats():
+    """The window whose EMA breaks the track is not part of the event: the
+    offset, peak and mean all stop at the previous window."""
+    events = track_stream([0.9, 0.7, 0.8, 0.2, 0.1], **KW)
+    assert events == [
+        TrackEvent(onset_idx=0, offset_idx=2, peak_score=0.9,
+                   mean_score=(0.9 + 0.7 + 0.8) / 3)
+    ]
+
+
+def test_sub_min_duration_blip_rejected_both_paths():
+    assert track_stream([0.9, 0.1, 0.1], **KW) == []  # update-close path
+    assert track_stream([0.1, 0.1, 0.9], **KW) == []  # finalize path
+
+
+def test_ema_smoothing_hand_computed():
+    """alpha=0.5 EMA sequence computed by hand, event stats pinned."""
+    kw = dict(ema_alpha=0.5, enter_threshold=0.6, exit_threshold=0.3, min_duration=2)
+    # p:    1.0   1.0    0.8   0.0    0.0
+    # ema:  1.0   1.0    0.9   0.45   0.225 -> exits at idx 4
+    events = track_stream([1.0, 1.0, 0.8, 0.0, 0.0], **kw)
+    assert events == [
+        TrackEvent(onset_idx=0, offset_idx=3, peak_score=1.0,
+                   mean_score=(1.0 + 1.0 + 0.9 + 0.45) / 4)
+    ]
+
+
+def test_reset_clears_state():
+    tr = TemporalTracker(**KW)
+    for p in (0.9, 0.9, 0.9):
+        tr.update(p)
+    tr.reset()
+    assert tr.finalize() == [] and tr.smoothed == 0.0
+
+
+# ---------------------------------------------------------------------------
+# Vectorised tracker
+# ---------------------------------------------------------------------------
+
+
+def test_vector_matches_scalar_dense_updates():
+    rng = np.random.default_rng(11)
+    n, steps = 6, 400
+    p = rng.random((steps, n))
+    kw = dict(ema_alpha=0.3, enter_threshold=0.6, exit_threshold=0.4, min_duration=2)
+    vec = VectorTemporalTracker(n, **kw)
+    scalars = [TemporalTracker(**kw) for _ in range(n)]
+    for t in range(steps):
+        st = vec.update(p[t])
+        for s in range(n):
+            ss = scalars[s].update(float(p[t, s]))
+            assert st["idx"][s] == ss["idx"]
+            assert st["smoothed"][s] == ss["smoothed"]
+            assert st["active"][s] == ss["active"]
+    vev = vec.finalize()
+    total = 0
+    for s in range(n):
+        assert vev[s] == scalars[s].finalize()
+        total += len(vev[s])
+    assert total > 0  # the comparison is not vacuous
+
+
+def test_vector_masked_updates_freeze_streams():
+    """A masked-out stream keeps its EMA, activity and window index frozen —
+    the uneven-arrival case the monitor engine produces every round."""
+    rng = np.random.default_rng(12)
+    n, steps = 4, 250
+    p = rng.random((steps, n))
+    masks = rng.random((steps, n)) < 0.6
+    kw = dict(ema_alpha=0.5, enter_threshold=0.55, exit_threshold=0.45, min_duration=1)
+    vec = VectorTemporalTracker(n, **kw)
+    scalars = [TemporalTracker(**kw) for _ in range(n)]
+    for t in range(steps):
+        vec.update(p[t], masks[t])
+        for s in range(n):
+            if masks[t, s]:
+                scalars[s].update(float(p[t, s]))
+    vev = vec.finalize()
+    assert sum(len(e) for e in vev) > 0
+    for s in range(n):
+        assert vev[s] == scalars[s].finalize()
+
+
+def test_vector_initial_state():
+    vec = VectorTemporalTracker(3)
+    assert not vec.active.any()
+    np.testing.assert_array_equal(vec.smoothed, np.zeros(3))
+    assert vec.finalize() == [[], [], []]
