@@ -7,12 +7,26 @@ kernel bench).  The model is the small detector shape on zcr features —
 interpret-mode kernel timings; the derived column notes the configuration so
 rows stay comparable across PRs.
 
-Set ``SMOKE=1`` to restrict to the smallest stream count.
+Sharded rows drive the same engine through ``shards``-way sharded-batch
+dispatch (1/2/4/8 shards over simulated CPU devices — the device-count
+override below must land before the first jax import, so keep this module's
+import order).  Set ``SMOKE=1`` to restrict to the smallest stream count and
+a single 2-shard row.
 """
 from __future__ import annotations
 
 import os
 import time
+
+# Simulated device pool for the sharded-dispatch rows (before jax import).
+# NOTE: this changes the measurement environment of *all* rows, including
+# the pre-existing unsharded ones — every row records ``host_devices`` so
+# cross-PR comparisons know which environment produced it (the PR-3
+# rebaseline moved the unsharded rows onto the 8-device pool).
+from repro.hostdevices import force_host_device_count
+
+N_HOST_DEVICES = 8
+force_host_device_count(N_HOST_DEVICES)
 
 import jax
 import numpy as np
@@ -23,6 +37,8 @@ from repro.models import cnn1d
 from repro.serving.engine import MonitorEngine
 
 STREAM_COUNTS = (1, 8, 64)
+SHARD_COUNTS = (1, 2, 4, 8)
+SHARDED_STREAMS = 8
 WINDOWS_PER_STREAM = 6
 BATCH_SLOTS = 8
 FEATURE = "zcr"
@@ -32,13 +48,14 @@ def _smoke() -> bool:
     return bool(os.environ.get("SMOKE"))
 
 
-def bench_monitor(n_streams: int, params, cfg) -> dict:
+def bench_monitor(n_streams: int, params, cfg, *, shards: int | None = None) -> dict:
     rng = np.random.default_rng(n_streams)
     engine = MonitorEngine(
         params, cfg,
         n_streams=n_streams,
         feature_kind=FEATURE,
         batch_slots=BATCH_SLOTS,
+        shards=shards,
     )
     audio = rng.standard_normal(
         (n_streams, WINDOWS_PER_STREAM * features.N_SAMPLES)
@@ -82,6 +99,32 @@ def main():
             windows_per_s=round(r["windows_per_s"], 2),
             n_streams=n,
             batch_slots=BATCH_SLOTS,
+            host_devices=jax.device_count(),
+        )
+    shard_counts = (2,) if _smoke() else SHARD_COUNTS
+    # An outer XLA_FLAGS override wins over ours (force_host_device_count
+    # never fights it) — only bench the shard counts that actually fit, and
+    # say so instead of dying after the unsharded rows already ran.
+    fitting = tuple(k for k in shard_counts if k <= jax.device_count())
+    if fitting != shard_counts:
+        print(
+            f"bench_serving: only {jax.device_count()} device(s) available; "
+            f"skipping shard counts {sorted(set(shard_counts) - set(fitting))}"
+        )
+    for k in fitting:
+        r = bench_monitor(SHARDED_STREAMS, params, cfg, shards=k)
+        row(
+            f"serving/monitor_{SHARDED_STREAMS}streams_x{WINDOWS_PER_STREAM}win_shard{k}",
+            f"{r['us_per_window']:.0f}",
+            f"interpret-mode; sharded dispatch over {k} simulated CPU "
+            f"device(s); {r['windows_per_s']:.1f} windows/s aggregate; "
+            f"{r['forward_calls']} forward calls ({BATCH_SLOTS} slots, "
+            f"{r['padded_slots']} padded); zcr features, small detector",
+            windows_per_s=round(r["windows_per_s"], 2),
+            n_streams=SHARDED_STREAMS,
+            batch_slots=BATCH_SLOTS,
+            shards=k,
+            host_devices=jax.device_count(),
         )
     if not _smoke():
         write_json("BENCH_serving.json", prefix="serving/")

@@ -1,10 +1,13 @@
 #!/usr/bin/env bash
 # CI entrypoint: dev deps (best effort — the container may be offline), the
-# fast test tier, then a ~30s benchmark smoke at the smallest shapes.
+# fast test tier, then a ~30s benchmark + sharded-driver smoke at the
+# smallest shapes.
 #
 #   scripts/ci.sh         fast tier (-m "not slow"): < ~2 min
 #   scripts/ci.sh --all   full tier-1 suite incl. @slow kernel-parity /
 #                         multi-device / LM-architecture tests (~5-6 min)
+#   scripts/ci.sh --cov   fast tier with statement coverage over the
+#                         serving package (repro.serving), fails under 85%
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -15,13 +18,27 @@ pip install -q -r requirements-dev.txt 2>/dev/null \
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 MARK=(-m "not slow")
-if [[ "${1:-}" == "--all" ]]; then
-  MARK=()  # full tier-1 verify (ROADMAP.md)
-fi
-# ${MARK[@]+...}: empty-array expansion is fatal under `set -u` on bash < 4.4
-python -m pytest -x -q ${MARK[@]+"${MARK[@]}"}
+COV=()
+case "${1:-}" in
+  --all)
+    MARK=()  # full tier-1 verify (ROADMAP.md)
+    ;;
+  --cov)
+    if python -c "import pytest_cov" 2>/dev/null; then
+      COV=(--cov=repro.serving --cov-report=term-missing --cov-fail-under=85)
+    else
+      echo "ci: pytest-cov unavailable (offline container); running without coverage" >&2
+    fi
+    ;;
+esac
+# ${ARR[@]+...}: empty-array expansion is fatal under `set -u` on bash < 4.4
+python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} ${COV[@]+"${COV[@]}"}
 
 # Benchmark smoke: smallest shapes only, proves the kernel + serving paths
 # still run end-to-end (does not touch the committed BENCH_*.json files).
 SMOKE=1 python -m benchmarks.bench_kernels
 SMOKE=1 python -m benchmarks.bench_serving
+
+# Sharded-driver smoke: the --shards path boots 2 simulated devices and
+# must produce windows end-to-end (random weights: plumbing only, fast).
+python -m repro.launch.monitor --seconds 2 --shards 2 --random

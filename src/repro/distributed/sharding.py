@@ -18,7 +18,30 @@ import threading
 from typing import Optional, Sequence
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+#: mesh axis name used by the serving layer's sharded-batch dispatch
+STREAM_AXIS = "streams"
+
+
+def stream_mesh(shards: int, *, axis: str = STREAM_AXIS) -> Mesh:
+    """1-D serving mesh: the first ``shards`` local devices on one axis.
+
+    The monitor engine splits its fixed ``batch_slots`` along this axis
+    (weights replicated, activation rows sharded) — the software analogue of
+    the paper's "more streams per watt" sequential scaling.  On CPU,
+    simulated devices come from ``XLA_FLAGS=--xla_force_host_platform_
+    device_count=N`` (set before the first jax import).
+    """
+    devs = np.asarray(jax.devices())
+    if shards < 1 or shards > devs.size:
+        raise ValueError(
+            f"stream_mesh: need 1 <= shards <= {devs.size} local devices, got "
+            f"{shards} (on CPU, raise the device count via XLA_FLAGS="
+            f"--xla_force_host_platform_device_count before importing jax)"
+        )
+    return Mesh(devs[:shards].reshape(shards), (axis,))
 
 # logical axis -> mesh axis (or tuple of mesh axes)
 DEFAULT_RULES: dict[str, tuple[str, ...]] = {

@@ -19,6 +19,14 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro import hostdevices
+
+# ``--shards k`` on CPU needs k simulated XLA devices, configured *before*
+# the first jax import — peek at the raw argv at module-import time.
+_shards = hostdevices.shards_from_argv()
+if _shards is not None:
+    hostdevices.force_host_device_count(_shards)
+
 import jax
 import numpy as np
 
@@ -65,8 +73,12 @@ def quick_detector(kind: str, cfg: cnn1d.CNNConfig, *, n: int = 240, seed: int =
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     ap.add_argument("--streams", type=int, default=4)
-    ap.add_argument("--duration", type=float, default=16.0, help="seconds per stream")
+    ap.add_argument("--duration", "--seconds", type=float, default=16.0,
+                    dest="duration", help="seconds per stream")
     ap.add_argument("--precision", choices=("int8", "fxp8"), default="int8")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard each micro-batch over this many devices "
+                         "(sharded-batch dispatch; bitwise-identical results)")
     ap.add_argument("--feature", default=None, choices=sorted(features.FEATURE_DIMS),
                     help="feature set (default: psd, or mfcc20 with --trained)")
     ap.add_argument("--slots", type=int, default=8, help="micro-batch slot count")
@@ -100,7 +112,10 @@ def main(argv=None):
         feature_kind=args.feature,
         batch_slots=args.slots,
         precision=args.precision,
+        shards=args.shards,
     )
+    if args.shards:
+        print(f"monitor: sharded dispatch over {engine.shards} device(s)")
 
     rng = np.random.default_rng(args.seed + 1)
     scenes, truths = zip(*(synth_scene(args.duration, rng) for _ in range(args.streams)))

@@ -57,6 +57,16 @@ def quantize_lm_params(params, policy: PrecisionPolicy | None = None, cfg: ArchC
         prec = policy.precision_for(path)
         if prec == Precision.INT8 or prec == Precision.FXP8:
             if tree.ndim >= 3:
+                if tree.ndim == 4 and path.rsplit("/", 1)[-1] in ("wq", "wk", "wv"):
+                    # stacked multi-head projections (layer, embed, heads,
+                    # head_dim): an output channel is a (head, head_dim)
+                    # pair, so only the embed contraction axis is reduced —
+                    # one scale per layer per head per lane.  Reducing over
+                    # heads too (the old keep_axes=(0, -1)) shared one scale
+                    # across all heads and cost olmoe ~8pp of argmax
+                    # agreement.  The 4-D guard keeps rwkv6's headless
+                    # (layer, d, d) wk/wv on the generic stacked rule.
+                    return int8_symmetric_keep(tree, keep_axes=(0, 2, 3))
                 # stacked (scan) weights: keep the layer axis AND the
                 # output-channel axis so lax.scan can slice per layer
                 return int8_symmetric_keep(tree, keep_axes=(0, tree.ndim - 1))

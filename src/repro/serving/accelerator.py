@@ -20,7 +20,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.distributed.sharding import STREAM_AXIS
 from repro.kernels import ops
 from repro.kernels.backend import resolve_interpret
 from repro.models.cnn1d import CNNConfig, _maxpool2
@@ -104,6 +107,72 @@ def accelerator_forward(
     else:
         qp = quantize_params(params, cfg, mode="fxp8" if fxp else "int8")
     return _forward_quantized(qp, x, resolve_interpret(interpret), per_sample_acts)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mesh", "axis_name", "interpret", "per_sample_acts")
+)
+def _forward_sharded(
+    qp: QuantizedParams,
+    x: jax.Array,
+    mesh: Mesh,
+    axis_name: str,
+    interpret: bool,
+    per_sample_acts: bool,
+) -> jax.Array:
+    fwd = functools.partial(
+        _forward_quantized, interpret=interpret, per_sample_acts=per_sample_acts
+    )
+    return shard_map(
+        fwd,
+        mesh=mesh,
+        in_specs=(P(), P(axis_name)),  # weights replicated, rows sharded
+        out_specs=P(axis_name),
+        check_rep=False,
+    )(qp, x)
+
+
+def accelerator_forward_sharded(
+    params: dict | QuantizedParams,
+    x: jax.Array,
+    cfg: CNNConfig,
+    *,
+    mesh: Mesh,
+    axis_name: str = STREAM_AXIS,
+    fxp: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Sharded-batch twin of :func:`accelerator_forward`: the batch dimension
+    is split along ``mesh``'s ``axis_name`` axis, weights stay replicated,
+    and each device runs the whole W8A8 datapath on its rows.
+
+    Because activations are quantised with **per-sample** scales, each row's
+    quantisation (and therefore its result) depends on nothing outside the
+    row — the scales travel with their rows across the shard boundary, and
+    the output is **bitwise identical** to the unsharded forward on the same
+    batch.  That is the serving analogue of the paper's sequential scaling
+    claim: partitioning the fixed batch over more hardware changes the
+    schedule, never the numbers (the conformance suite pins this).
+
+    Per-tensor activation scales are deliberately unsupported here: a shard-
+    local per-tensor amax would differ from the global one, silently breaking
+    the parity guarantee.
+
+    ``x.shape[0]`` must divide evenly by the shard count.
+    """
+    n_shards = mesh.shape[axis_name]
+    if x.shape[0] % n_shards != 0:
+        raise ValueError(
+            f"batch {x.shape[0]} not divisible by {n_shards} shards on "
+            f"mesh axis {axis_name!r}"
+        )
+    if isinstance(params, QuantizedParams):
+        qp = params
+    else:
+        qp = quantize_params(params, cfg, mode="fxp8" if fxp else "int8")
+    return _forward_sharded(
+        qp, x, mesh, axis_name, resolve_interpret(interpret), True
+    )
 
 
 def deviation_report(

@@ -19,23 +19,36 @@ This module scales that loop to N concurrent streams:
 
 Because the accelerator path quantises activations with *per-sample* scales,
 a window's probability is bitwise independent of whatever other streams it
-was co-batched with — streaming one window at a time, or 64 streams packed
-8 to a batch, produces the identical numbers (the streaming-parity tests pin
-this).  ``python -m repro.launch.monitor`` is the demo driver and
-``benchmarks/bench_serving.py`` the throughput harness on top of this class.
+was co-batched with — streaming one window at a time, 64 streams packed 8 to
+a batch, or a batch split over a device mesh, produces the identical numbers
+(the streaming-parity and sharded-conformance tests pin this).  ``shards=k``
+routes every fixed-slot block through the ``shard_map``-based
+:func:`~repro.serving.accelerator.accelerator_forward_sharded` (weights
+replicated, activation rows split over a 1-D "streams" mesh), and dispatch
+is double-buffered: the next block is submitted while the previous block's
+device buffers are still in flight.  ``python -m repro.launch.monitor`` is
+the demo driver and ``benchmarks/bench_serving.py`` the throughput harness
+on top of this class.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.data import features
+from repro.distributed.sharding import stream_mesh
 from repro.kernels.backend import resolve_interpret
 from repro.models.cnn1d import CNNConfig
-from repro.serving.accelerator import accelerator_forward
-from repro.serving.quantized_params import QuantizedParams, quantize_params
+from repro.serving.accelerator import accelerator_forward, accelerator_forward_sharded
+from repro.serving.quantized_params import (
+    QuantizedParams,
+    quantize_params,
+    replicate_params,
+)
 from repro.serving.tracker import TrackEvent, VectorTemporalTracker
 
 
@@ -58,6 +71,11 @@ class StreamRing:
         self._w = 0  # absolute count of samples written
         self._r = 0  # absolute index of the next window's first sample
         self.dropped = 0  # samples lost to overflow
+
+    @property
+    def buffered(self) -> int:
+        """Samples currently held between the read and write heads."""
+        return self._w - self._r
 
     @property
     def ready(self) -> int:
@@ -123,6 +141,10 @@ class MonitorEngine:
     the jitted forward in fixed ``batch_slots`` chunks.  ``drain`` loops
     until no stream has a complete window left; ``finalize`` flushes the
     trackers and returns per-stream event lists.
+
+    ``shards``/``mesh`` select sharded-batch dispatch (each block split over
+    the mesh's "streams" axis, bitwise identical results); ``inflight``
+    bounds how many blocks may be in flight before the oldest is harvested.
     """
 
     def __init__(
@@ -137,6 +159,9 @@ class MonitorEngine:
         precision: str = "int8",
         capacity_windows: int = 8,
         interpret: bool | None = None,
+        shards: int | None = None,
+        mesh: jax.sharding.Mesh | None = None,
+        inflight: int = 2,
         ema_alpha: float = 0.4,
         enter_threshold: float = 0.65,
         exit_threshold: float = 0.35,
@@ -159,6 +184,41 @@ class MonitorEngine:
             if isinstance(params, QuantizedParams)
             else quantize_params(params, cfg, mode=precision)
         )
+        # Sharded-batch dispatch: split each fixed-slot block along a 1-D
+        # device mesh ("streams" axis), weights replicated.  `shards=None`
+        # keeps the single-device path; `shards=k` (including k=1, useful to
+        # measure shard_map overhead) routes every forward through
+        # accelerator_forward_sharded.
+        if mesh is None and shards is not None:
+            mesh = stream_mesh(shards)
+        self._mesh = mesh
+        self._mesh_axis = None
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    f"MonitorEngine needs a 1-D mesh (one batch-sharding "
+                    f"axis), got axes {mesh.axis_names}"
+                )
+            if shards is not None and mesh.devices.size != shards:
+                raise ValueError(
+                    f"mesh has {mesh.devices.size} device(s) but shards="
+                    f"{shards}; pass one or make them agree"
+                )
+            self._mesh_axis = mesh.axis_names[0]
+            n_shards = mesh.shape[self._mesh_axis]
+            if batch_slots % n_shards != 0:
+                raise ValueError(
+                    f"batch_slots {batch_slots} must divide evenly over "
+                    f"{n_shards} shards"
+                )
+            self._qp = replicate_params(self._qp, mesh)
+        self.shards = 1 if mesh is None else mesh.shape[self._mesh_axis]
+        # Double-buffered async dispatch: up to `inflight` fixed-slot blocks
+        # may be on-device concurrently; results are harvested (blocking)
+        # only when the pipeline is full or the round ends.
+        if inflight < 1:
+            raise ValueError(f"inflight must be >= 1, got {inflight}")
+        self._inflight = inflight
         self._rings = [
             StreamRing(self.window, self.hop, capacity_windows)
             for _ in range(n_streams)
@@ -191,23 +251,47 @@ class MonitorEngine:
 
     # -- scoring -------------------------------------------------------------
 
+    def _submit(self, block: np.ndarray) -> jax.Array:
+        """Dispatch one fixed-slot block; returns the in-flight device buffer
+        (jax dispatch is async — this does not wait for the result)."""
+        x = jnp.asarray(block)
+        if self._mesh is not None:
+            return accelerator_forward_sharded(
+                self._qp, x, self.cfg, mesh=self._mesh,
+                axis_name=self._mesh_axis, interpret=self._interpret,
+            )
+        return accelerator_forward(
+            self._qp, x, self.cfg, interpret=self._interpret
+        )
+
     def _forward(self, feats: np.ndarray) -> np.ndarray:
-        """Micro-batch (n, M) features through fixed-size jit slots."""
+        """Micro-batch (n, M) features through fixed-size jit slots.
+
+        Double-buffered: block N+1 is submitted while block N's device
+        buffers are still in flight; the explicit ``block_until_ready`` sits
+        at harvest time, not submit time, so device compute and host-side
+        packing of the next block overlap.
+        """
         n = len(feats)
         probs = np.empty((n, self.cfg.n_classes), np.float32)
+        pending: collections.deque[tuple[int, int, jax.Array]] = collections.deque()
+
+        def harvest():
+            start, n_valid, buf = pending.popleft()
+            out = np.asarray(buf.block_until_ready())
+            probs[start : start + n_valid] = out[:n_valid]
+
         for start in range(0, n, self.batch_slots):
             chunk = feats[start : start + self.batch_slots]
             block = np.zeros((self.batch_slots, self.cfg.input_len), np.float32)
             block[: len(chunk)] = chunk  # dead slots carry silence
-            out = accelerator_forward(
-                self._qp,
-                jnp.asarray(block),
-                self.cfg,
-                interpret=self._interpret,
-            )
-            probs[start : start + len(chunk)] = np.asarray(out)[: len(chunk)]
+            pending.append((start, len(chunk), self._submit(block)))
             self.forward_calls += 1
             self.padded_slots += self.batch_slots - len(chunk)
+            if len(pending) >= self._inflight:
+                harvest()
+        while pending:
+            harvest()
         return probs
 
     def step(self) -> list[WindowScore]:

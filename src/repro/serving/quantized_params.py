@@ -76,6 +76,18 @@ def quantize_params(params: dict, cfg: CNNConfig, *, mode: str = "int8") -> Quan
     return QuantizedParams(mode=mode, convs=convs, denses=denses)
 
 
+def replicate_params(qp: QuantizedParams, mesh: jax.sharding.Mesh) -> QuantizedParams:
+    """Pin every weight leaf onto ``mesh`` fully replicated.
+
+    Sharded-batch dispatch keeps weights on all devices and splits only the
+    activation rows; placing the artifact once at engine construction means
+    no per-call host->device weight transfers and no accidental re-layout
+    inside the jitted sharded forward.
+    """
+    sharding = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    return jax.tree_util.tree_map(lambda leaf: jax.device_put(leaf, sharding), qp)
+
+
 class QuantizedParamsCache:
     """Per-precision-mode memo over one fp32 checkpoint.
 

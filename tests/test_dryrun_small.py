@@ -53,6 +53,11 @@ SCRIPT = textwrap.dedent(
     out["ok"] = True
     out["temp"] = ma.temp_size_in_bytes
     ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        # older jax returns [dict] (one entry per computation); newer
+        # returns the dict directly — the 5 inherited tier-1 failures here
+        # were this .get on a list, not a real lowering problem
+        ca = ca[0] if ca else dict()
     out["flops"] = ca.get("flops")
     print("RESULT:" + json.dumps(out))
     """

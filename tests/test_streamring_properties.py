@@ -1,0 +1,99 @@
+"""Property-based tests for :class:`repro.serving.engine.StreamRing`.
+
+The ring is the engine's only stateful ingest path, so its invariants are
+stated as properties over *arbitrary* chunk-size delivery schedules rather
+than hand-picked examples:
+
+* a popped window is always exactly ``window`` samples — never partial;
+* every popped window starts on a hop boundary of the original stream,
+  including after drop-oldest overflow (drops are whole hops);
+* sample conservation: delivered == dropped + consumed-by-pops + buffered.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback shim (tests/_hypothesis_fallback.py).
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: deterministic-example fallback shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.serving.engine import StreamRing
+
+
+def chunk_sizes(max_chunk=64, max_chunks=24):
+    return st.lists(
+        st.floats(0.0, float(max_chunk)).map(int), min_size=1, max_size=max_chunks
+    )
+
+
+def small_int(lo, hi):
+    return st.floats(float(lo), float(hi)).map(int)
+
+
+def _labelled(n, start):
+    """Identifiable samples: the k-th delivered sample has value start + k."""
+    return np.arange(start, start + n, dtype=np.float32)
+
+
+class TestStreamRingProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(chunk_sizes(), small_int(1, 12), small_int(1, 12))
+    def test_never_yields_partial_window(self, chunks, window, hop):
+        hop = min(hop, window)
+        ring = StreamRing(window, hop, capacity_windows=3)
+        delivered = 0
+        for n in chunks:
+            ring.push(_labelled(n, delivered))
+            delivered += n
+            while True:
+                w = ring.pop_window()
+                if w is None:
+                    # None only when genuinely short of a full window
+                    assert ring.buffered < window
+                    break
+                assert w.shape == (window,)
+
+    @settings(max_examples=40, deadline=None)
+    @given(chunk_sizes(max_chunk=96), small_int(2, 10), small_int(1, 10))
+    def test_hop_alignment_survives_overflow(self, chunks, window, hop):
+        """Every popped window is a contiguous hop-aligned slice of the
+        delivered stream, even after drop-oldest overflow."""
+        hop = min(hop, window)
+        ring = StreamRing(window, hop, capacity_windows=2)  # tight: forces drops
+        delivered = 0
+        prev_start = None
+        for n in chunks:
+            ring.push(_labelled(n, delivered))
+            delivered += n
+            while (w := ring.pop_window()) is not None:
+                start = int(w[0])
+                # contiguous slice of the stream, starting on a hop boundary
+                np.testing.assert_array_equal(w, _labelled(window, start))
+                assert start % hop == 0
+                if prev_start is not None:
+                    # read head only moves forward, in whole hops
+                    assert start > prev_start and (start - prev_start) % hop == 0
+                prev_start = start
+
+    @settings(max_examples=40, deadline=None)
+    @given(chunk_sizes(max_chunk=96), small_int(1, 12), small_int(1, 12))
+    def test_sample_conservation(self, chunks, window, hop):
+        """delivered == dropped + hop-consumed + still-buffered, with the
+        per-push return value summing to the ``dropped`` counter."""
+        hop = min(hop, window)
+        ring = StreamRing(window, hop, capacity_windows=2)
+        delivered = 0
+        pops = 0
+        drop_returns = 0
+        for n in chunks:
+            drop_returns += ring.push(_labelled(n, delivered))
+            delivered += n
+            while ring.pop_window() is not None:
+                pops += 1
+        assert drop_returns == ring.dropped
+        # each pop consumes exactly one hop off the front; the remainder is
+        # still buffered (and too short to form another window)
+        assert delivered == ring.dropped + pops * hop + ring.buffered
+        assert ring.buffered < window
