@@ -32,6 +32,8 @@ import jax
 import numpy as np
 
 from benchmarks.common import row, write_json
+from repro.core.precision_policy import PrecisionPolicy
+from repro.core.pruning import plan_prune
 from repro.data import features
 from repro.models import cnn1d
 from repro.serving.engine import MonitorEngine
@@ -43,19 +45,39 @@ WINDOWS_PER_STREAM = 6
 BATCH_SLOTS = 8
 FEATURE = "zcr"
 
+# Deployment-cell rows (pruned / mixed-precision artifacts): a dense-heavy
+# detector shape where the flatten->dense interface dominates, so the
+# paper's 75% flatten cut shows up as serving throughput, not just FLOPs.
+DEPLOY_FEATURE = "psd"  # 512-dim input -> 128 frames x 32 ch = 4096 flatten
+DEPLOY_CHANNELS = (4, 32)
+DEPLOY_STREAMS = 8
+DEPLOY_KEEP = 8  # 32 -> 8 channels (+1 frame trim): 4096 -> 1016 (-75%)
+DEPLOY_POLICY = "conv0/w=bf16,dense1/w=fp32"
+
 
 def _smoke() -> bool:
     return bool(os.environ.get("SMOKE"))
 
 
-def bench_monitor(n_streams: int, params, cfg, *, shards: int | None = None) -> dict:
+def bench_monitor(
+    n_streams: int,
+    params,
+    cfg,
+    *,
+    shards: int | None = None,
+    feature: str = FEATURE,
+    prune=None,
+    policy=None,
+) -> dict:
     rng = np.random.default_rng(n_streams)
     engine = MonitorEngine(
         params, cfg,
         n_streams=n_streams,
-        feature_kind=FEATURE,
+        feature_kind=feature,
         batch_slots=BATCH_SLOTS,
         shards=shards,
+        prune=prune,
+        policy=policy,
     )
     audio = rng.standard_normal(
         (n_streams, WINDOWS_PER_STREAM * features.N_SAMPLES)
@@ -126,6 +148,49 @@ def main():
             shards=k,
             host_devices=jax.device_count(),
         )
+    # Deployment-cell rows: the artifact the paper actually ships — pruned
+    # flatten (SIII-C) and per-layer mixed precision (SIII-B) — benched at
+    # equal stream counts against the unpruned all-int8 baseline on the
+    # dense-heavy shape.  Acceptance: pruned strictly above unpruned.
+    deploy_cfg = cnn1d.CNNConfig(
+        input_len=features.FEATURE_DIMS[DEPLOY_FEATURE],
+        channels=DEPLOY_CHANNELS, hidden=8,
+    )
+    deploy_params = cnn1d.init_params(jax.random.PRNGKey(1), deploy_cfg)
+    last = len(DEPLOY_CHANNELS) - 1
+    spec = plan_prune(
+        deploy_params[f"conv{last}"]["w"], deploy_cfg.n_frames,
+        keep=DEPLOY_KEEP, trim_frames=1,
+    )
+    policy = PrecisionPolicy.parse(DEPLOY_POLICY, default="int8")
+    deploy_streams = 2 if _smoke() else DEPLOY_STREAMS
+    cells = [("unpruned", None, None), ("pruned", spec, None)]
+    if not _smoke():
+        cells += [("mixed", None, policy), ("pruned_mixed", spec, policy)]
+    for name, prune, pol in cells:
+        r = bench_monitor(
+            deploy_streams, deploy_params, deploy_cfg,
+            feature=DEPLOY_FEATURE, prune=prune, policy=pol,
+        )
+        flat = spec.flatten_after if prune is not None else spec.flatten_before
+        row(
+            f"serving/monitor_deploy_{name}_{deploy_streams}streams_x{WINDOWS_PER_STREAM}win",
+            f"{r['us_per_window']:.0f}",
+            f"interpret-mode; deployment cell '{name}' (flatten {flat}"
+            f"{', policy ' + DEPLOY_POLICY if pol is not None else ''}); "
+            f"{r['windows_per_s']:.1f} windows/s aggregate; "
+            f"{r['forward_calls']} forward calls ({BATCH_SLOTS} slots, "
+            f"{r['padded_slots']} padded); {DEPLOY_FEATURE} features, "
+            f"channels {DEPLOY_CHANNELS}",
+            windows_per_s=round(r["windows_per_s"], 2),
+            n_streams=deploy_streams,
+            batch_slots=BATCH_SLOTS,
+            flatten=int(flat),
+            pruned=prune is not None,
+            mixed=pol is not None,
+            host_devices=jax.device_count(),
+        )
+
     if not _smoke():
         write_json("BENCH_serving.json", prefix="serving/")
 

@@ -7,7 +7,9 @@
 #   scripts/ci.sh --all   full tier-1 suite incl. @slow kernel-parity /
 #                         multi-device / LM-architecture tests (~5-6 min)
 #   scripts/ci.sh --cov   fast tier with statement coverage over the
-#                         serving package (repro.serving), fails under 85%
+#                         serving package (repro.serving) plus the deploy-
+#                         time transform modules (repro.core.pruning,
+#                         repro.core.precision_policy), fails under 85%
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,7 +27,9 @@ case "${1:-}" in
     ;;
   --cov)
     if python -c "import pytest_cov" 2>/dev/null; then
-      COV=(--cov=repro.serving --cov-report=term-missing --cov-fail-under=85)
+      COV=(--cov=repro.serving --cov=repro.core.pruning
+           --cov=repro.core.precision_policy
+           --cov-report=term-missing --cov-fail-under=85)
     else
       echo "ci: pytest-cov unavailable (offline container); running without coverage" >&2
     fi
@@ -42,3 +46,9 @@ SMOKE=1 python -m benchmarks.bench_serving
 # Sharded-driver smoke: the --shards path boots 2 simulated devices and
 # must produce windows end-to-end (random weights: plumbing only, fast).
 python -m repro.launch.monitor --seconds 2 --shards 2 --random
+
+# Pruned-serving smoke: the deployed configuration (structured prune +
+# mixed per-layer precision baked into the artifact) end-to-end through the
+# monitor driver (random weights: plumbing only, fast).
+python -m repro.launch.monitor --seconds 2 --prune 2 \
+  --policy "conv0/w=bf16,dense1/w=fp32" --random

@@ -1,0 +1,78 @@
+"""Regenerate the committed golden serving artifacts under artifacts/golden/.
+
+The golden set pins the *deployed* numerics across PRs: a seeded tiny
+detector is baked into serving artifacts (one plain int8, one with the full
+deployment configuration — structured prune + mixed per-layer precision),
+and the expected class probabilities on a fixed input batch are stored next
+to them.  ``tests/test_golden_artifact.py`` replays the artifacts through
+``accelerator_forward`` and fails loudly on any drift.
+
+Run this ONLY when a numerics change is intentional, then commit the diff:
+
+    PYTHONPATH=src python scripts/make_golden_artifact.py
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.precision_policy import Precision, PrecisionPolicy  # noqa: E402
+from repro.core.pruning import plan_prune  # noqa: E402
+from repro.data import features  # noqa: E402
+from repro.models import cnn1d  # noqa: E402
+from repro.serving.accelerator import accelerator_forward  # noqa: E402
+from repro.serving.quantized_params import quantize_params, save_artifact  # noqa: E402
+
+GOLDEN = Path(__file__).resolve().parents[1] / "artifacts" / "golden"
+
+#: seeded tiny detector — small enough to commit, big enough to exercise
+#: every layer kind (conv stack, both denses, softmax head)
+CFG = cnn1d.CNNConfig(input_len=features.FEATURE_DIMS["zcr"], channels=(4, 8), hidden=8)
+PARAM_SEED = 42
+INPUT_SEED = 1234
+N_ROWS = 8
+PRUNE_KEEP = 3
+PRUNE_TRIM = 1
+
+
+def build_cells(params):
+    spec = plan_prune(
+        params["conv1"]["w"], CFG.n_frames, keep=PRUNE_KEEP, trim_frames=PRUNE_TRIM
+    )
+    mixed = PrecisionPolicy(
+        rules={"conv0/w": Precision.BF16, "dense1/w": Precision.FP32},
+        default=Precision.INT8,
+    )
+    return {
+        "int8": quantize_params(params, CFG, mode="int8"),
+        "pruned_mixed": quantize_params(
+            params, CFG, mode="int8", prune=spec, policy=mixed
+        ),
+    }
+
+
+def main():
+    GOLDEN.mkdir(parents=True, exist_ok=True)
+    params = cnn1d.init_params(jax.random.PRNGKey(PARAM_SEED), CFG)
+    rng = np.random.default_rng(INPUT_SEED)
+    x = rng.standard_normal((N_ROWS, CFG.input_len)).astype(np.float32)
+    x *= (10.0 ** rng.uniform(-2, 2, size=(N_ROWS, 1))).astype(np.float32)
+    np.save(GOLDEN / "input.npy", x)
+    for name, qp in build_cells(params).items():
+        save_artifact(GOLDEN / f"detector_{name}.npz", qp)
+        # interpret=True: the expected numbers are the interpreter-mode (CPU
+        # reference) numerics, the sign-off surface the tests replay.
+        probs = accelerator_forward(qp, jnp.asarray(x), CFG, interpret=True)
+        np.save(GOLDEN / f"expected_{name}.npy", np.asarray(probs))
+        print(f"golden: wrote detector_{name}.npz + expected_{name}.npy")
+    print(f"golden: artifacts under {GOLDEN}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ from __future__ import annotations
 import dataclasses
 import fnmatch
 import json
+import os
 from typing import Mapping
 
 import jax
@@ -43,29 +44,71 @@ class PrecisionPolicy:
     default: Precision = Precision.FP32
 
     def precision_for(self, path: str) -> Precision:
+        # Most-specific matching pattern wins: longest first, then fewest
+        # wildcards (an exact path beats an equal-length glob), then the
+        # lexicographically smallest pattern (iteration is over sorted rules
+        # with a strict comparison).  Resolution is therefore a function of
+        # the rule *set*, never of dict insertion order — two policies built
+        # from the same rules in different orders resolve identically
+        # (pinned by tests/test_precision_policy.py).
         best = None
-        best_len = -1
-        for pat, prec in self.rules.items():
-            if fnmatch.fnmatch(path, pat) and len(pat) > best_len:
-                best, best_len = prec, len(pat)
+        best_key: tuple | None = None
+        for pat in sorted(self.rules):
+            if fnmatch.fnmatch(path, pat):
+                key = (len(pat), -sum(pat.count(c) for c in "*?["))
+                if best_key is None or key > best_key:
+                    best, best_key = self.rules[pat], key
         return best if best is not None else self.default
 
     @staticmethod
     def uniform(precision: Precision) -> "PrecisionPolicy":
         return PrecisionPolicy(rules={}, default=precision)
 
-    def to_json(self) -> str:
-        return json.dumps(
-            {"default": self.default.value, "rules": {k: v.value for k, v in self.rules.items()}}
-        )
+    def to_dict(self) -> dict:
+        return {
+            "default": self.default.value,
+            "rules": {k: v.value for k, v in self.rules.items()},
+        }
 
     @staticmethod
-    def from_json(s: str) -> "PrecisionPolicy":
-        d = json.loads(s)
+    def from_dict(d: Mapping) -> "PrecisionPolicy":
         return PrecisionPolicy(
             rules={k: Precision(v) for k, v in d["rules"].items()},
             default=Precision(d["default"]),
         )
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    @staticmethod
+    def from_json(s: str) -> "PrecisionPolicy":
+        return PrecisionPolicy.from_dict(json.loads(s))
+
+    @staticmethod
+    def parse(spec: str, *, default: "Precision | str | None" = None) -> "PrecisionPolicy":
+        """Build a policy from a CLI-ish spec.
+
+        Accepts, in order of detection: a path to a ``to_json`` file, an
+        inline JSON string, or comma-separated ``pattern=mode`` rules
+        (``"conv0/w=bf16,dense1/w=fp32"``).  ``default`` overrides the
+        default mode for the rule-list form (JSON forms carry their own).
+        """
+        default = Precision(default) if default is not None else Precision.FP32
+        spec = spec.strip()
+        if os.path.exists(spec):
+            with open(spec) as f:
+                return PrecisionPolicy.from_json(f.read())
+        if spec.startswith("{"):
+            return PrecisionPolicy.from_json(spec)
+        rules = {}
+        for item in spec.split(","):
+            if not item.strip():
+                continue
+            pat, _, mode = item.partition("=")
+            if not _:
+                raise ValueError(f"policy rule {item!r} is not 'pattern=mode'")
+            rules[pat.strip()] = Precision(mode.strip())
+        return PrecisionPolicy(rules=rules, default=default)
 
     @staticmethod
     def from_sensitivity(scores: Mapping[str, float], **kw) -> "PrecisionPolicy":

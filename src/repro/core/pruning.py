@@ -39,6 +39,34 @@ class PruneSpec:
     def reduction(self) -> float:
         return 1.0 - self.flatten_after / self.flatten_before
 
+    def to_dict(self) -> dict:
+        """Plain-JSON form so a spec can ride along in configs/artifacts."""
+        return {
+            "keep_channels": [int(c) for c in self.keep_channels],
+            "keep_frames": [int(f) for f in self.keep_frames],
+            "flatten_before": int(self.flatten_before),
+            "flatten_after": int(self.flatten_after),
+        }
+
+    @staticmethod
+    def from_dict(d: Mapping) -> "PruneSpec":
+        return PruneSpec(
+            keep_channels=np.asarray(d["keep_channels"], np.int64),
+            keep_frames=np.asarray(d["keep_frames"], np.int64),
+            flatten_before=int(d["flatten_before"]),
+            flatten_after=int(d["flatten_after"]),
+        )
+
+    @property
+    def cache_key(self) -> tuple:
+        """Hashable identity (numpy members make the dataclass unhashable)."""
+        return (
+            tuple(int(c) for c in self.keep_channels),
+            tuple(int(f) for f in self.keep_frames),
+            self.flatten_before,
+            self.flatten_after,
+        )
+
 
 def channel_importance(w_conv: jax.Array) -> jax.Array:
     """L1-norm importance of each output channel of a conv kernel.

@@ -27,14 +27,20 @@ from repro.core.quantization import Precision, pwq_error
 
 
 def layer_sensitivity(w: jax.Array, grad: jax.Array) -> jax.Array:
-    """Paper eqs. (2)-(3) for one layer's weight tensor + loss gradient."""
+    """Paper eqs. (2)-(3) for one layer's weight tensor + loss gradient.
+
+    Eq. (3)'s ``s_{l,sc,8}`` term compares the default 8-bit quantiser with
+    itself, so it is **identically zero by construction** — computing it
+    would be a third ``pwq_quantize`` pass per layer for a guaranteed-zero
+    operand.  The max against it survives as a clamp at 0 (the score can
+    never be negative), with no dead quantiser call.
+    """
     w = w.astype(jnp.float32)
     n_l = w.size
     gnorm = jnp.linalg.norm(grad.astype(jnp.float32))
     base = pwq_error(w, 8)  # Q^PwQ default = 8-bit
     s_16 = (base - pwq_error(w, 16)) * gnorm / n_l
-    s_8 = (base - pwq_error(w, 8)) * gnorm / n_l  # == 0 by construction; kept per eq. (3)
-    return jnp.maximum(s_16, s_8)
+    return jnp.maximum(s_16, 0.0)  # max(s_16, s_8) with s_8 == 0
 
 
 def sensitivity_scores(

@@ -76,6 +76,16 @@ def main(argv=None):
     ap.add_argument("--duration", "--seconds", type=float, default=16.0,
                     dest="duration", help="seconds per stream")
     ap.add_argument("--precision", choices=("int8", "fxp8"), default="int8")
+    ap.add_argument("--prune", type=int, default=None, metavar="KEEP",
+                    help="bake a structured channel prune into the served "
+                         "artifact: keep this many output channels of the "
+                         "last conv block (+1 boundary-frame trim, paper "
+                         "SIII-C)")
+    ap.add_argument("--policy", default=None, metavar="SPEC",
+                    help="bake a per-layer precision policy into the served "
+                         "artifact: a PrecisionPolicy JSON file/string, or "
+                         "inline 'conv0/w=bf16,dense1/w=fp32' rules "
+                         "(default mode = --precision)")
     ap.add_argument("--shards", type=int, default=None,
                     help="shard each micro-batch over this many devices "
                          "(sharded-batch dispatch; bitwise-identical results)")
@@ -106,12 +116,39 @@ def main(argv=None):
         else:
             params = quick_detector(args.feature, cfg, seed=args.seed)
 
+    # Deploy-time decisions baked into the served artifact (quantise-once).
+    prune_spec = None
+    if args.prune is not None:
+        from repro.core.pruning import plan_prune
+
+        last = len(cfg.channels) - 1
+        prune_spec = plan_prune(
+            params[f"conv{last}"]["w"], cfg.n_frames,
+            keep=args.prune, trim_frames=1,
+        )
+        print(
+            f"monitor: pruned artifact — flatten {prune_spec.flatten_before} "
+            f"-> {prune_spec.flatten_after} (-{prune_spec.reduction:.0%})"
+        )
+    policy = None
+    if args.policy is not None:
+        from repro.core.precision_policy import PrecisionPolicy
+
+        policy = PrecisionPolicy.parse(args.policy, default=args.precision)
+        modes = {
+            pat: prec.value for pat, prec in sorted(policy.rules.items())
+        }
+        print(f"monitor: mixed-precision artifact — {modes}, "
+              f"default {policy.default.value}")
+
     engine = MonitorEngine(
         params, cfg,
         n_streams=args.streams,
         feature_kind=args.feature,
         batch_slots=args.slots,
         precision=args.precision,
+        prune=prune_spec,
+        policy=policy,
         shards=args.shards,
     )
     if args.shards:

@@ -9,10 +9,22 @@ the CORDIC softmax.  Against fp32 JAX inference this bounds the
 RTL team would diff against.
 
 Weights come from a :class:`~repro.serving.quantized_params.QuantizedParams`
-artifact (quantised once per precision mode at deploy time); only the
-per-request activations are quantised per call.  The whole forward is one
-``jax.jit`` program, interpret-mode on CPU and compiled on TPU via the
-``interpret=None`` autodetect.
+artifact (baked once at deploy time); only the per-request activations are
+quantised per call.  The whole forward is one ``jax.jit`` program,
+interpret-mode on CPU and compiled on TPU via the ``interpret=None``
+autodetect.
+
+The artifact's static metadata drives per-layer dispatch (the POLARON
+"configuration prefetcher interprets layer metadata" idea): each layer's
+``conv_modes``/``dense_modes`` tag routes it to the matching datapath —
+fused W8A8 kernels for int8/fxp8, a bf16-operand/fp32-accumulate einsum for
+BF16, plain fp32 otherwise — and a pruned artifact's ``keep_frames`` applies
+the boundary-frame trim between the last pool and the flatten.  Every
+datapath keeps each batch row's result independent of its co-batch (the
+8-bit modes via per-sample activation scales, the float modes trivially), so
+the streaming == batched == sharded bitwise guarantee holds for pruned and
+mixed-precision artifacts unchanged (pinned by
+``tests/test_pruned_serving_conformance.py``).
 """
 from __future__ import annotations
 
@@ -30,56 +42,87 @@ from repro.models.cnn1d import CNNConfig, _maxpool2
 from repro.serving.quantized_params import QuantizedParams, quantize_params
 
 
+def _quantizer(layer_mode: str):
+    from repro.core.quantization import fxp8_quantize, int8_symmetric
+
+    return fxp8_quantize if layer_mode == "fxp8" else int8_symmetric
+
+
+def _conv1d_float(x: jax.Array, w: jax.Array) -> jax.Array:
+    """'same' 1D conv for the float layer modes; accumulates in fp32 even for
+    bf16 operands (the MXU's bf16-in/fp32-accumulate discipline)."""
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1,), padding="SAME",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        preferred_element_type=jnp.float32,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("interpret", "per_sample_acts"))
 def _forward_quantized(
     qp: QuantizedParams, x: jax.Array, interpret: bool, per_sample_acts: bool
 ) -> jax.Array:
-    from repro.core.quantization import fxp8_quantize, int8_symmetric
-
-    quant = fxp8_quantize if qp.fxp else int8_symmetric
     # Per-sample (row-wise) activation scales are the default: with one
     # per-tensor scale, a single loud sample crushes the quantisation
     # resolution of every co-batched quiet one — exactly the failure mode
     # micro-batching windows from N independent streams triggers.  Row-wise
     # scales also make every row's result independent of its co-batch, which
-    # is what the streaming engine's bitwise-parity guarantee rests on.
+    # is what the streaming engine's bitwise-parity guarantee rests on.  The
+    # float layer modes preserve the same row independence for free (conv and
+    # matmul rows never mix).
     act_axis = 0 if per_sample_acts else None
     bsz = x.shape[0]
+    conv_modes, dense_modes = qp.layer_modes
     h = x[:, :, None].astype(jnp.float32)
-    for layer in qp.convs:
-        hq = quant(h, axis=act_axis)  # per-request activation quantisation
-        h = ops.conv1d_fused_q(
-            hq.q,
-            layer["w"].q,
-            hq.scale.reshape(-1, 1) if per_sample_acts else hq.scale,
-            layer["w"].scale,
-            layer["b"],
-            act="relu",  # CORDIC ReLU == max(v, 0): fused into the epilogue
-            interpret=interpret,
-        )
+    for layer, lmode in zip(qp.convs, conv_modes):
+        if lmode in ("int8", "fxp8"):
+            hq = _quantizer(lmode)(h, axis=act_axis)  # per-request act quant
+            h = ops.conv1d_fused_q(
+                hq.q,
+                layer["w"].q,
+                hq.scale.reshape(-1, 1) if per_sample_acts else hq.scale,
+                layer["w"].scale,
+                layer["b"],
+                act="relu",  # CORDIC ReLU == max(v, 0): fused into the epilogue
+                interpret=interpret,
+            )
+        else:
+            hin = h.astype(jnp.bfloat16) if lmode == "bf16" else h
+            h = jnp.maximum(_conv1d_float(hin, layer["w"]) + layer["b"], 0.0)
         h = _maxpool2(h)
-    h = h.reshape(h.shape[0], -1)
-    d0, d1 = qp.denses
-    hq = quant(h, axis=act_axis)
-    h = ops.quant_matmul(
-        hq.q,
-        d0["w"].q,
-        hq.scale.reshape(bsz if per_sample_acts else 1, 1),
-        d0["w"].scale.reshape(1, -1),
-        d0["b"],
-        act="relu",
-        interpret=interpret,
-    )
-    hq = quant(h, axis=act_axis)
-    logits = ops.quant_matmul(
-        hq.q,
-        d1["w"].q,
-        hq.scale.reshape(bsz if per_sample_acts else 1, 1),
-        d1["w"].scale.reshape(1, -1),
-        d1["b"],
-        interpret=interpret,
-    )
-    return ops.cordic_softmax(logits, interpret=interpret)
+    if qp.keep_frames is not None:
+        h = h[:, : qp.keep_frames, :]  # pruned artifact: boundary-frame trim
+    h = h.reshape(bsz, -1)
+    for i, (layer, lmode) in enumerate(zip(qp.denses, dense_modes)):
+        act = "relu" if i < len(qp.denses) - 1 else None
+        if lmode in ("int8", "fxp8"):
+            hq = _quantizer(lmode)(h, axis=act_axis)
+            h = ops.quant_matmul(
+                hq.q,
+                layer["w"].q,
+                hq.scale.reshape(bsz if per_sample_acts else 1, 1),
+                layer["w"].scale.reshape(1, -1),
+                layer["b"],
+                act=act,
+                interpret=interpret,
+            )
+        else:
+            if lmode == "bf16":
+                h = jnp.einsum(
+                    "bk,kn->bn",
+                    h.astype(jnp.bfloat16),
+                    layer["w"],
+                    preferred_element_type=jnp.float32,
+                )
+            else:
+                h = jnp.einsum(
+                    "bk,kn->bn", h, layer["w"],
+                    precision=jax.lax.Precision.HIGHEST,
+                )
+            h = h + layer["b"]
+            if act == "relu":
+                h = jnp.maximum(h, 0.0)
+    return ops.cordic_softmax(h, interpret=interpret)
 
 
 def accelerator_forward(
@@ -95,8 +138,10 @@ def accelerator_forward(
     entirely on the kernel datapath.
 
     Pass a :class:`QuantizedParams` artifact to serve from the weight cache
-    (zero weight-quantisation work per call); a raw fp32 ``params`` dict is
-    quantised on the fly (``fxp`` selects the mode) for one-off sign-offs.
+    (zero weight-quantisation work per call) — pruned and mixed-precision
+    artifacts dispatch per layer off the artifact's tags.  A raw fp32
+    ``params`` dict is quantised on the fly (``fxp`` selects the mode) for
+    one-off sign-offs.
 
     ``per_sample_acts`` (default) quantises activations with one scale per
     batch row; ``False`` restores the legacy per-tensor scale (kept as the
@@ -156,7 +201,9 @@ def accelerator_forward_sharded(
 
     Per-tensor activation scales are deliberately unsupported here: a shard-
     local per-tensor amax would differ from the global one, silently breaking
-    the parity guarantee.
+    the parity guarantee.  Pruned and mixed-precision artifacts shard
+    unchanged — the float layer modes compute each row independently, so the
+    bitwise guarantee extends to every artifact cell (conformance-pinned).
 
     ``x.shape[0]`` must divide evenly by the shard count.
     """

@@ -145,6 +145,11 @@ class MonitorEngine:
     ``shards``/``mesh`` select sharded-batch dispatch (each block split over
     the mesh's "streams" axis, bitwise identical results); ``inflight``
     bounds how many blocks may be in flight before the oldest is harvested.
+
+    ``prune``/``policy`` bake a structured channel prune and a per-layer
+    precision policy into the served artifact at construction time — the
+    engine then serves the paper's deployed configuration (pruned flatten,
+    mixed per-layer modes) with every parity guarantee intact.
     """
 
     def __init__(
@@ -157,6 +162,8 @@ class MonitorEngine:
         hop_samples: int | None = None,
         batch_slots: int = 8,
         precision: str = "int8",
+        prune=None,  # PruneSpec baked into the served artifact
+        policy=None,  # PrecisionPolicy resolving per-layer modes
         capacity_windows: int = 8,
         interpret: bool | None = None,
         shards: int | None = None,
@@ -179,11 +186,21 @@ class MonitorEngine:
         self.window = features.N_SAMPLES
         self.hop = hop_samples if hop_samples is not None else features.N_SAMPLES
         self._interpret = resolve_interpret(interpret)
-        self._qp = (
-            params
-            if isinstance(params, QuantizedParams)
-            else quantize_params(params, cfg, mode=precision)
-        )
+        # The served artifact: either pre-baked, or baked here from the fp32
+        # checkpoint with the deployment decisions (default precision, prune
+        # spec, per-layer policy) applied at quantise-once time.
+        if isinstance(params, QuantizedParams):
+            if prune is not None or policy is not None:
+                raise ValueError(
+                    "prune/policy are quantise-once decisions and cannot be "
+                    "applied to an already-baked QuantizedParams artifact; "
+                    "pass the fp32 checkpoint instead"
+                )
+            self._qp = params
+        else:
+            self._qp = quantize_params(
+                params, cfg, mode=precision, prune=prune, policy=policy
+            )
         # Sharded-batch dispatch: split each fixed-slot block along a 1-D
         # device mesh ("streams" axis), weights replicated.  `shards=None`
         # keeps the single-device path; `shards=k` (including k=1, useful to

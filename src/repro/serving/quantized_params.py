@@ -1,28 +1,48 @@
-"""Pre-quantised parameter cache for the deployed datapath.
+"""Pre-quantised parameter artifact for the deployed datapath.
 
-The serving lifecycle is: train in fp32 → quantise the weights **once** per
-precision mode → serve every request against the cached int8 payloads.  The
-seed ``accelerator_forward`` re-ran ``int8_symmetric``/``fxp8_quantize`` on
-every weight tensor on every call; with millions of requests that is pure
-waste — weights only change on redeploy.  ``QuantizedParams`` is the frozen
-artifact (conv weights per-output-channel on axis 2, dense weights on axis
-1, biases kept fp32 for the epilogue adder), and ``QuantizedParamsCache``
-memoises one artifact per precision mode for a given fp32 checkpoint.
+The serving lifecycle is: train in fp32 → bake the deployment decisions
+**once** → serve every request against the frozen artifact.  Three decisions
+are baked in at quantise-once time:
 
-``quantize_calls`` counts weight-tensor quantisations performed by this
-module — the test surface proving serving does zero per-call quantisation
-work.
+* **precision** — each layer's weight is stored in its serving numeric form:
+  int8/fxp8 payload + scale (``QTensor``) for the 8-bit modes, a bf16 cast
+  for BF16, plain fp32 otherwise.  A :class:`~repro.core.precision_policy.
+  PrecisionPolicy` resolves per-layer modes (the paper's §III-B layer-
+  sensitivity assignment); without one, every layer rides the artifact's
+  default ``mode``.
+* **pruning** — a :class:`~repro.core.pruning.PruneSpec` (§III-C) physically
+  removes pruned conv-out channels and the matching dense rows *before*
+  quantisation, so per-channel scales are computed on the surviving weights
+  and the serving graph never touches dead FLOPs.  The boundary-frame trim
+  survives as ``keep_frames`` (applied between the last pool and the
+  flatten).
+* **layout** — conv weights per-output-channel on axis 2, dense weights on
+  axis 1, biases kept fp32 for the epilogue adder.
+
+``QuantizedParamsCache`` memoises one artifact per (mode, prune, policy)
+cell over a fp32 checkpoint; ``save_artifact``/``load_artifact`` round-trip
+an artifact through one ``.npz`` file (the golden-artifact conformance
+surface).  ``quantize_calls`` counts weight-tensor quantisations performed
+by this module — the test surface proving serving does zero per-call
+quantisation work.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
+from repro.core.precision_policy import PrecisionPolicy
+from repro.core.pruning import PruneSpec, apply_prune_conv, apply_prune_dense
 from repro.core.quantization import QTensor, fxp8_quantize, int8_symmetric
 from repro.models.cnn1d import CNNConfig
 
 MODES = ("int8", "fxp8")
+#: every numeric form a single layer may be stored in
+LAYER_MODES = ("fp32", "bf16", "int8", "fxp8")
 
 # Incremented once per weight tensor quantised; tests assert this stays flat
 # across serving calls.
@@ -31,21 +51,52 @@ quantize_calls: int = 0
 
 @dataclasses.dataclass(frozen=True)
 class QuantizedParams:
-    """One precision mode's frozen weights for ``accelerator_forward``."""
+    """The frozen serving artifact for ``accelerator_forward``.
 
-    mode: str  # "int8" | "fxp8" (static pytree aux data)
-    convs: tuple[dict, ...]  # each {"w": QTensor(K,Cin,Cout), "b": fp32}
-    denses: tuple[dict, ...]  # each {"w": QTensor(In,Out), "b": fp32}
+    ``mode`` is the default precision; ``conv_modes``/``dense_modes`` carry
+    the per-layer tags the accelerator dispatches on (``None`` means uniform
+    ``mode`` — the pre-mixed-precision artifact shape).  ``keep_frames`` is
+    the pruned artifact's frame count before the flatten (``None`` =
+    unpruned).  All of these are static pytree aux data, so a jitted forward
+    specialises on the artifact's layer layout, never on its weights.
+    """
+
+    mode: str  # default mode: "int8" | "fxp8" (static pytree aux data)
+    convs: tuple[dict, ...]  # each {"w": QTensor | jax.Array, "b": fp32}
+    denses: tuple[dict, ...]  # each {"w": QTensor | jax.Array, "b": fp32}
+    conv_modes: tuple[str, ...] | None = None  # per-layer tags (None = uniform)
+    dense_modes: tuple[str, ...] | None = None
+    keep_frames: int | None = None  # frames kept before flatten (None = all)
 
     @property
     def fxp(self) -> bool:
         return self.mode == "fxp8"
 
+    @property
+    def layer_modes(self) -> tuple[tuple[str, ...], tuple[str, ...]]:
+        """Resolved (conv_modes, dense_modes) with the uniform default applied."""
+        return (
+            self.conv_modes or (self.mode,) * len(self.convs),
+            self.dense_modes or (self.mode,) * len(self.denses),
+        )
+
+    @property
+    def mixed(self) -> bool:
+        conv_m, dense_m = self.layer_modes
+        return any(m != self.mode for m in conv_m + dense_m)
+
+    @property
+    def pruned(self) -> bool:
+        return self.keep_frames is not None
+
 
 jax.tree_util.register_pytree_node(
     QuantizedParams,
-    lambda p: ((p.convs, p.denses), p.mode),
-    lambda mode, kids: QuantizedParams(mode, kids[0], kids[1]),
+    lambda p: (
+        (p.convs, p.denses),
+        (p.mode, p.conv_modes, p.dense_modes, p.keep_frames),
+    ),
+    lambda aux, kids: QuantizedParams(aux[0], kids[0], kids[1], aux[1], aux[2], aux[3]),
 )
 
 
@@ -53,27 +104,98 @@ def _quantize_weight(w: jax.Array, mode: str, axis: int) -> QTensor:
     global quantize_calls
     quantize_calls += 1
     quant = fxp8_quantize if mode == "fxp8" else int8_symmetric
-    return quant(w.astype(jax.numpy.float32), axis=axis)
+    return quant(w.astype(jnp.float32), axis=axis)
 
 
-def quantize_params(params: dict, cfg: CNNConfig, *, mode: str = "int8") -> QuantizedParams:
-    """Quantise a trained fp32 checkpoint into one mode's serving artifact."""
+def _prep_weight(w: jax.Array, layer_mode: str, axis: int):
+    """One layer's weight in its serving numeric form."""
+    if layer_mode in ("int8", "fxp8"):
+        return _quantize_weight(w, layer_mode, axis)
+    if layer_mode == "bf16":
+        return w.astype(jnp.bfloat16)
+    return w.astype(jnp.float32)
+
+
+def quantize_params(
+    params: dict,
+    cfg: CNNConfig,
+    *,
+    mode: str = "int8",
+    prune: PruneSpec | None = None,
+    policy: PrecisionPolicy | None = None,
+) -> QuantizedParams:
+    """Bake a trained fp32 checkpoint into one serving artifact.
+
+    ``mode`` is the default precision for every layer; ``policy`` overrides
+    it per layer (resolved against ``conv{i}/w`` / ``dense{i}/w`` paths, the
+    same paths the emulation forward uses).  ``prune`` physically removes the
+    planned conv-out channels and dense rows *before* quantisation — scales
+    are computed on the surviving weights, and the artifact remembers the
+    boundary-frame trim in ``keep_frames``.
+    """
     assert mode in MODES, mode
+    n_convs = len(cfg.channels)
+    names = [f"conv{i}" for i in range(n_convs)] + ["dense0", "dense1"]
+    if policy is None:
+        modes = {name: mode for name in names}
+    else:
+        modes = {name: policy.precision_for(f"{name}/w").value for name in names}
+    bad = {n: m for n, m in modes.items() if m not in LAYER_MODES}
+    assert not bad, f"unsupported layer modes {bad}"
+
+    weights = {name: params[name]["w"] for name in names}
+    biases = {name: params[name]["b"] for name in names}
+    keep_frames = None
+    if prune is not None:
+        if prune.flatten_before != cfg.flatten_size:
+            raise ValueError(
+                f"PruneSpec planned for flatten {prune.flatten_before}, "
+                f"model flattens {cfg.flatten_size}"
+            )
+        # The artifact records the frame trim as a count and the accelerator
+        # applies it as a prefix slice, so only boundary trims (a contiguous
+        # prefix of frames, what plan_prune produces) can be served — an
+        # arbitrary frame subset would silently disagree with the dense rows
+        # apply_prune_dense actually kept.
+        if not np.array_equal(
+            np.asarray(prune.keep_frames), np.arange(len(prune.keep_frames))
+        ):
+            raise ValueError(
+                "PruneSpec.keep_frames must be a contiguous prefix "
+                "(boundary-frame trim); arbitrary frame subsets are not "
+                "servable"
+            )
+        last = f"conv{n_convs - 1}"
+        weights[last], biases[last] = apply_prune_conv(
+            weights[last], biases[last], prune
+        )
+        weights["dense0"] = apply_prune_dense(
+            params["dense0"]["w"], prune, cfg.n_frames, cfg.channels[-1]
+        )
+        keep_frames = len(prune.keep_frames)
+
     convs = tuple(
         {
-            "w": _quantize_weight(params[f"conv{i}"]["w"], mode, axis=2),
-            "b": params[f"conv{i}"]["b"].astype(jax.numpy.float32),
+            "w": _prep_weight(weights[f"conv{i}"], modes[f"conv{i}"], axis=2),
+            "b": biases[f"conv{i}"].astype(jnp.float32),
         }
-        for i in range(len(cfg.channels))
+        for i in range(n_convs)
     )
     denses = tuple(
         {
-            "w": _quantize_weight(params[name]["w"], mode, axis=1),
-            "b": params[name]["b"].astype(jax.numpy.float32),
+            "w": _prep_weight(weights[name], modes[name], axis=1),
+            "b": biases[name].astype(jnp.float32),
         }
         for name in ("dense0", "dense1")
     )
-    return QuantizedParams(mode=mode, convs=convs, denses=denses)
+    return QuantizedParams(
+        mode=mode,
+        convs=convs,
+        denses=denses,
+        conv_modes=tuple(modes[f"conv{i}"] for i in range(n_convs)),
+        dense_modes=(modes["dense0"], modes["dense1"]),
+        keep_frames=keep_frames,
+    )
 
 
 def replicate_params(qp: QuantizedParams, mesh: jax.sharding.Mesh) -> QuantizedParams:
@@ -88,20 +210,114 @@ def replicate_params(qp: QuantizedParams, mesh: jax.sharding.Mesh) -> QuantizedP
     return jax.tree_util.tree_map(lambda leaf: jax.device_put(leaf, sharding), qp)
 
 
+# ---------------------------------------------------------------------------
+# Artifact (de)serialisation — the golden-artifact conformance surface
+# ---------------------------------------------------------------------------
+
+_ARTIFACT_VERSION = 1
+
+
+def save_artifact(path, qp: QuantizedParams) -> None:
+    """Write one artifact to ``path`` as an ``.npz`` (arrays + JSON meta).
+
+    bf16 weights are stored as fp32 (a lossless widening — npz has no native
+    bfloat16) and re-narrowed on load; int8 payloads/scales are stored raw.
+    """
+    conv_modes, dense_modes = qp.layer_modes
+    arrays: dict[str, np.ndarray] = {}
+    meta: dict = {
+        "version": _ARTIFACT_VERSION,
+        "mode": qp.mode,
+        "conv_modes": list(conv_modes),
+        "dense_modes": list(dense_modes),
+        "keep_frames": qp.keep_frames,
+        "scale_axes": {},
+    }
+    for kind, layers, modes in (
+        ("conv", qp.convs, conv_modes),
+        ("dense", qp.denses, dense_modes),
+    ):
+        for i, (layer, lmode) in enumerate(zip(layers, modes)):
+            pre = f"{kind}{i}"
+            w = layer["w"]
+            if lmode in ("int8", "fxp8"):
+                assert isinstance(w, QTensor), (pre, type(w))
+                arrays[f"{pre}.w_q"] = np.asarray(w.q)
+                arrays[f"{pre}.w_scale"] = np.asarray(w.scale, np.float32)
+                meta["scale_axes"][pre] = w.axis
+            else:
+                arrays[f"{pre}.w"] = np.asarray(w, np.float32)
+            arrays[f"{pre}.b"] = np.asarray(layer["b"], np.float32)
+    arrays["meta"] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode(), np.uint8
+    )
+    with open(path, "wb") as f:
+        np.savez(f, **arrays)
+
+
+def load_artifact(path) -> QuantizedParams:
+    """Reconstruct a :func:`save_artifact` file as a live artifact."""
+    z = np.load(path)
+    meta = json.loads(bytes(z["meta"]).decode())
+    if meta["version"] != _ARTIFACT_VERSION:
+        raise ValueError(f"artifact version {meta['version']} != {_ARTIFACT_VERSION}")
+
+    def layer(pre: str, lmode: str) -> dict:
+        if lmode in ("int8", "fxp8"):
+            w = QTensor(
+                q=jnp.asarray(z[f"{pre}.w_q"]),
+                scale=jnp.asarray(z[f"{pre}.w_scale"]),
+                axis=meta["scale_axes"][pre],
+            )
+        elif lmode == "bf16":
+            w = jnp.asarray(z[f"{pre}.w"]).astype(jnp.bfloat16)
+        else:
+            w = jnp.asarray(z[f"{pre}.w"])
+        return {"w": w, "b": jnp.asarray(z[f"{pre}.b"])}
+
+    return QuantizedParams(
+        mode=meta["mode"],
+        convs=tuple(
+            layer(f"conv{i}", m) for i, m in enumerate(meta["conv_modes"])
+        ),
+        denses=tuple(
+            layer(f"dense{i}", m) for i, m in enumerate(meta["dense_modes"])
+        ),
+        conv_modes=tuple(meta["conv_modes"]),
+        dense_modes=tuple(meta["dense_modes"]),
+        keep_frames=meta["keep_frames"],
+    )
+
+
 class QuantizedParamsCache:
-    """Per-precision-mode memo over one fp32 checkpoint.
+    """Per-deployment-cell memo over one fp32 checkpoint.
 
     ``cache.get("int8")`` quantises on first use and returns the same
     ``QuantizedParams`` object forever after — the train → quantise once →
-    serve lifecycle in one place.
+    serve lifecycle in one place.  A cell is the full deployment decision
+    (mode, prune, policy): asking for the same cell twice never re-quantises,
+    asking for a new cell bakes a new artifact.
     """
 
     def __init__(self, params: dict, cfg: CNNConfig):
         self._params = params
         self._cfg = cfg
-        self._by_mode: dict[str, QuantizedParams] = {}
+        self._by_cell: dict[tuple, QuantizedParams] = {}
 
-    def get(self, mode: str = "int8") -> QuantizedParams:
-        if mode not in self._by_mode:
-            self._by_mode[mode] = quantize_params(self._params, self._cfg, mode=mode)
-        return self._by_mode[mode]
+    def get(
+        self,
+        mode: str = "int8",
+        *,
+        prune: PruneSpec | None = None,
+        policy: PrecisionPolicy | None = None,
+    ) -> QuantizedParams:
+        cell = (
+            mode,
+            prune.cache_key if prune is not None else None,
+            policy.to_json() if policy is not None else None,
+        )
+        if cell not in self._by_cell:
+            self._by_cell[cell] = quantize_params(
+                self._params, self._cfg, mode=mode, prune=prune, policy=policy
+            )
+        return self._by_cell[cell]

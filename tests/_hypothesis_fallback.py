@@ -1,10 +1,11 @@
 """Minimal stand-in for ``hypothesis`` when it is not installed.
 
 The tier-1 suite must collect and run on a bare container (no network, no
-dev extras).  This shim implements exactly the surface
-``test_quantization.py`` uses — ``given``, ``settings`` and the
-``st.lists``/``st.floats``/``.map`` strategy combinators — by running each
-property against a fixed batch of deterministic pseudo-random examples.
+dev extras).  This shim implements exactly the surface the property tests
+use — ``given``, ``settings`` and the ``st.lists``/``st.floats``/
+``st.integers``/``st.sampled_from``/``.map`` strategy combinators — by
+running each property against a fixed batch of deterministic pseudo-random
+examples.
 With the real ``hypothesis`` installed (see requirements-dev.txt) the tests
 import it instead and get true shrinking/property search.
 """
@@ -40,7 +41,18 @@ def _lists(elements: _Strategy, min_size=0, max_size=10, **_kw):
     return _Strategy(gen)
 
 
-st = types.SimpleNamespace(floats=_floats, lists=_lists)
+def _integers(min_value=0, max_value=100, **_kw):
+    return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def _sampled_from(options):
+    options = list(options)
+    return _Strategy(lambda rng: options[int(rng.integers(0, len(options)))])
+
+
+st = types.SimpleNamespace(
+    floats=_floats, lists=_lists, integers=_integers, sampled_from=_sampled_from
+)
 
 
 def settings(**_kw):

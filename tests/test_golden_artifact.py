@@ -1,0 +1,61 @@
+"""Golden-artifact regression: the deployed numerics are pinned to disk.
+
+``artifacts/golden/`` holds a seeded tiny detector baked into serving
+artifacts (plain int8 and the full deployment cell — pruned + mixed
+per-layer precision) plus the expected probabilities on a committed input
+batch.  Any change anywhere in the serving stack (quantisers, kernels,
+dispatch, prune plumbing, artifact IO) that moves the deployed numbers
+fails here *bitwise* and loudly — with the regeneration command in the
+failure message, so an intentional numerics change is a conscious,
+reviewable diff of the golden files.
+"""
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import cnn1d
+from repro.serving.accelerator import accelerator_forward
+from repro.serving.quantized_params import load_artifact
+
+GOLDEN = Path(__file__).resolve().parents[1] / "artifacts" / "golden"
+REGEN = "PYTHONPATH=src python scripts/make_golden_artifact.py"
+
+
+def _cfg(input_len: int) -> cnn1d.CNNConfig:
+    # accelerator_forward takes its shapes from the artifact; the config is
+    # only the wrapper-level contract (input length matches the stored batch).
+    return cnn1d.CNNConfig(input_len=input_len, channels=(4, 8), hidden=8)
+
+
+@pytest.mark.parametrize("name", ["int8", "pruned_mixed"])
+def test_golden_artifact_numerics_pinned(name):
+    x = np.load(GOLDEN / "input.npy")
+    qp = load_artifact(GOLDEN / f"detector_{name}.npz")
+    got = np.asarray(
+        accelerator_forward(qp, jnp.asarray(x), _cfg(x.shape[1]), interpret=True)
+    )
+    want = np.load(GOLDEN / f"expected_{name}.npy")
+    if not np.array_equal(got, want):
+        pytest.fail(
+            f"Golden artifact {name!r} deployed numerics drifted "
+            f"(max |dp| = {np.abs(got - want).max():.3e}, "
+            f"{int((got != want).sum())}/{want.size} values changed).\n"
+            f"If this change is intentional, regenerate and commit the "
+            f"golden files:\n    {REGEN}"
+        )
+
+
+def test_golden_artifact_metadata():
+    """The committed artifacts carry the deployment decisions they claim."""
+    plain = load_artifact(GOLDEN / "detector_int8.npz")
+    assert plain.mode == "int8" and not plain.mixed and not plain.pruned
+
+    deploy = load_artifact(GOLDEN / "detector_pruned_mixed.npz")
+    assert deploy.pruned and deploy.mixed
+    assert deploy.layer_modes == (("bf16", "int8"), ("int8", "fp32"))
+    # keep=3 channels, one boundary frame trimmed from the 32-frame map
+    assert deploy.keep_frames == 31
+    assert deploy.convs[-1]["b"].shape == (3,)
+    assert deploy.denses[0]["w"].shape == (31 * 3, 8)

@@ -1,0 +1,135 @@
+"""PrecisionPolicy: lossless serialisation and order-stable glob resolution.
+
+A policy rides along in configs, checkpoints and serving artifacts, so its
+round-trip must be lossless and its pattern resolution must be a function of
+the rule *set* — never of dict insertion order (two artifacts baked from the
+same rules written in different orders must dispatch identically).
+"""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.precision_policy import (
+    PrecisionPolicy,
+    fake_quant_params,
+    policy_einsum,
+)
+from repro.core.quantization import Precision
+
+RULES = {
+    "conv*/w": Precision.INT8,
+    "conv0/w": Precision.BF16,
+    "dense1/w": Precision.FP32,
+    "dense*/w": Precision.FXP8,
+}
+
+
+def test_dict_round_trip_lossless():
+    pol = PrecisionPolicy(rules=dict(RULES), default=Precision.FXP8)
+    back = PrecisionPolicy.from_dict(pol.to_dict())
+    assert back == pol
+    assert back.rules == RULES and back.default == Precision.FXP8
+
+
+def test_json_round_trip_lossless():
+    pol = PrecisionPolicy(rules=dict(RULES), default=Precision.BF16)
+    s = pol.to_json()
+    json.loads(s)  # valid JSON
+    assert PrecisionPolicy.from_json(s) == pol
+    # serialisation is canonical: same rule set, any insertion order -> same bytes
+    reordered = PrecisionPolicy(
+        rules=dict(reversed(list(RULES.items()))), default=Precision.BF16
+    )
+    assert reordered.to_json() == s
+
+
+PATHS = ["conv0/w", "conv1/w", "conv2/w", "dense0/w", "dense1/w", "emb/w"]
+
+
+def test_resolution_is_insertion_order_stable():
+    fwd = PrecisionPolicy(rules=dict(RULES), default=Precision.FP32)
+    rev = PrecisionPolicy(
+        rules=dict(reversed(list(RULES.items()))), default=Precision.FP32
+    )
+    for path in PATHS:
+        assert fwd.precision_for(path) == rev.precision_for(path), path
+
+
+def test_longest_match_wins():
+    pol = PrecisionPolicy(rules=dict(RULES), default=Precision.FP32)
+    assert pol.precision_for("conv0/w") == Precision.BF16  # exact beats glob
+    assert pol.precision_for("conv1/w") == Precision.INT8
+    assert pol.precision_for("dense1/w") == Precision.FP32  # exact beats dense*
+    assert pol.precision_for("dense0/w") == Precision.FXP8
+    assert pol.precision_for("emb/w") == Precision.FP32  # default
+
+
+def test_equal_length_overlap_breaks_ties_deterministically():
+    """Two same-length overlapping patterns: the lexicographically smallest
+    wins, regardless of which was inserted first."""
+    a = {"conv?/w": Precision.BF16, "conv0/*": Precision.INT8}
+    assert len("conv?/w") == len("conv0/*")
+    p1 = PrecisionPolicy(rules=dict(a), default=Precision.FP32)
+    p2 = PrecisionPolicy(rules=dict(reversed(list(a.items()))), default=Precision.FP32)
+    assert (
+        p1.precision_for("conv0/w")
+        == p2.precision_for("conv0/w")
+        == Precision.INT8  # "conv0/*" < "conv?/w" lexicographically
+    )
+
+
+def test_parse_inline_rules_json_and_file(tmp_path):
+    inline = PrecisionPolicy.parse("conv0/w=bf16, dense1/w=fp32", default="int8")
+    assert inline.rules == {"conv0/w": Precision.BF16, "dense1/w": Precision.FP32}
+    assert inline.default == Precision.INT8
+
+    as_json = PrecisionPolicy.parse(inline.to_json())
+    assert as_json == inline
+
+    f = tmp_path / "policy.json"
+    f.write_text(inline.to_json())
+    from_file = PrecisionPolicy.parse(str(f))
+    assert from_file == inline
+
+    with pytest.raises(ValueError, match="pattern=mode"):
+        PrecisionPolicy.parse("conv0/w")
+    with pytest.raises(ValueError):
+        PrecisionPolicy.parse("conv0/w=int9")
+
+
+def test_fake_quant_params_walks_tree_per_policy():
+    rng = np.random.default_rng(5)
+    params = {
+        "conv0": {"w": jnp.ones((3, 2, 4)), "b": jnp.zeros((4,))},
+        "dense0": {
+            "w": jnp.asarray(rng.standard_normal((4, 2)), jnp.float32),
+            "b": jnp.zeros((2,)),
+        },
+    }
+    pol = PrecisionPolicy(rules={"conv0/w": Precision.FP32}, default=Precision.INT8)
+    out = fake_quant_params(params, pol)
+    np.testing.assert_array_equal(  # fp32 layer untouched
+        np.asarray(out["conv0"]["w"]), np.asarray(params["conv0"]["w"])
+    )
+    assert out["dense0"]["b"].shape == (2,)  # biases ride through unquantised
+    assert not np.array_equal(  # int8 fake-quant moved the dense weights
+        np.asarray(out["dense0"]["w"]), np.asarray(params["dense0"]["w"])
+    )
+
+
+@pytest.mark.parametrize(
+    "prec", [Precision.FP32, Precision.BF16, Precision.INT8, Precision.FXP8]
+)
+def test_policy_einsum_dispatches_every_mode(prec):
+    rng = np.random.default_rng(0)
+    # post-ReLU-like activations: the 8-bit modes run PACT, which clips to
+    # [0, alpha] — negative inputs would be zeroed by design, not by error.
+    x = jnp.asarray(rng.uniform(0.0, 4.0, (4, 8)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((8, 6)), jnp.float32)
+    out = policy_einsum("bk,kn->bn", x, w, prec)
+    assert out.shape == (4, 6) and out.dtype == jnp.float32
+    ref = np.asarray(x) @ np.asarray(w)
+    atol = {Precision.FP32: 1e-5, Precision.BF16: 0.3}.get(prec, 1.0)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=atol)

@@ -1,0 +1,97 @@
+"""Property-based tests for :class:`repro.core.pruning.PruneSpec`.
+
+The prune planner's contract is stated as properties over arbitrary keep-K
+and trim choices rather than the single paper configuration:
+
+* the paper configuration is reproduced exactly (35,072 -> 8,704);
+* keep-mask propagation into the consumer dense layer is equivalence-
+  preserving: the pruned forward equals the masked full-size forward for
+  *any* keep-K, not just the paper's 64;
+* the flatten reduction is monotone in keep-K (more channels kept can never
+  shrink the flatten), and the planned sizes are internally consistent;
+* ``to_dict``/``from_dict`` round-trips losslessly.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback shim (tests/_hypothesis_fallback.py).
+"""
+import jax
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # bare container: deterministic-example fallback shim
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.pruning import PruneSpec, plan_prune
+from repro.models import cnn1d
+
+CFG = cnn1d.CNNConfig(input_len=64, channels=(4, 8), hidden=8)
+PARAMS = cnn1d.init_params(jax.random.PRNGKey(1), CFG)
+X = jax.random.normal(jax.random.PRNGKey(2), (2, CFG.input_len))
+N_CH = CFG.channels[-1]
+
+
+def test_paper_config_exact():
+    """keep=64, trim=1 on the canonical feature map is Table I, exactly."""
+    w = jax.random.normal(jax.random.PRNGKey(0), (3, 128, 256))
+    spec = plan_prune(w, cnn1d.CANONICAL.n_frames, keep=64, trim_frames=1)
+    assert spec.flatten_before == 35_072
+    assert spec.flatten_after == 8_704
+    assert len(spec.keep_channels) == 64 and len(spec.keep_frames) == 136
+
+
+@settings(deadline=None)
+@given(st.integers(1, N_CH), st.integers(0, 1))
+def test_keep_mask_propagation_is_equivalence_preserving(keep, trim):
+    """For any keep-K and boundary trim, pruning physically == zeroing the
+    dropped channels (and trimming the same frames) in the full model."""
+    pruned, pcfg, spec = cnn1d.prune_model(PARAMS, CFG, keep=keep, trim_frames=trim)
+    assert sorted(set(int(c) for c in spec.keep_channels)) == sorted(
+        int(c) for c in spec.keep_channels
+    )
+    out_p = cnn1d.forward_pruned(pruned, X, pcfg, spec)
+
+    mask = np.zeros(N_CH, np.float32)
+    mask[np.asarray(spec.keep_channels)] = 1.0
+    masked = {k: dict(v) for k, v in PARAMS.items()}
+    masked["conv1"]["w"] = PARAMS["conv1"]["w"] * mask[None, None, :]
+    masked["conv1"]["b"] = PARAMS["conv1"]["b"] * mask
+    if trim:  # zero the dense rows of the trimmed boundary frames too
+        wd = np.asarray(PARAMS["dense0"]["w"]).reshape(CFG.n_frames, N_CH, -1).copy()
+        wd[len(spec.keep_frames):] = 0.0
+        masked["dense0"]["w"] = np.reshape(wd, (CFG.flatten_size, -1))
+    out_m = cnn1d.forward(masked, X, CFG)
+    np.testing.assert_allclose(
+        np.asarray(out_p), np.asarray(out_m), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(deadline=None)
+@given(st.integers(1, N_CH - 1), st.integers(0, 2))
+def test_reduction_monotone_in_keep(keep, trim):
+    """Keeping one more channel grows the flatten by exactly the kept frame
+    count — the reduction is strictly monotone in keep-K."""
+    w = PARAMS["conv1"]["w"]
+    lo = plan_prune(w, CFG.n_frames, keep=keep, trim_frames=trim)
+    hi = plan_prune(w, CFG.n_frames, keep=keep + 1, trim_frames=trim)
+    n_frames_kept = CFG.n_frames - trim
+    assert lo.flatten_after == n_frames_kept * keep
+    assert hi.flatten_after - lo.flatten_after == n_frames_kept
+    assert hi.reduction < lo.reduction
+    assert 0.0 <= hi.reduction < 1.0
+    # the kept set is nested: the top-K channels are a subset of the top-K+1
+    assert set(int(c) for c in lo.keep_channels) <= set(
+        int(c) for c in hi.keep_channels
+    )
+
+
+@settings(deadline=None)
+@given(st.integers(1, N_CH), st.integers(0, 2))
+def test_prunespec_dict_round_trip(keep, trim):
+    spec = plan_prune(PARAMS["conv1"]["w"], CFG.n_frames, keep=keep, trim_frames=trim)
+    back = PruneSpec.from_dict(spec.to_dict())
+    np.testing.assert_array_equal(back.keep_channels, spec.keep_channels)
+    np.testing.assert_array_equal(back.keep_frames, spec.keep_frames)
+    assert back.flatten_before == spec.flatten_before
+    assert back.flatten_after == spec.flatten_after
+    assert back.cache_key == spec.cache_key

@@ -70,3 +70,26 @@ def test_pinned_overrides():
     policy = S.assign_precisions({"a": 1.0, "b": 0.1}, high_fraction=0.0,
                                  pinned={"b": Precision.FP32})
     assert policy["b"] == Precision.FP32
+
+
+def test_s8_term_is_identically_zero_and_never_computed(monkeypatch):
+    """Eq. (3)'s s_{l,sc,8} term compares the 8-bit quantiser with itself —
+    zero by construction.  The score must clamp at 0 exactly as if the term
+    were computed, while paying only two quantiser calls per layer (the
+    8-bit base + the 16-bit scale-corrected variant), not three."""
+    rng = np.random.default_rng(0)
+    w = jnp.asarray(rng.standard_normal((16, 16)), jnp.float32)
+    g = jnp.ones_like(w)
+
+    calls = []
+    real = S.pwq_error
+    monkeypatch.setattr(S, "pwq_error", lambda t, n: calls.append(n) or real(t, n))
+    s = S.layer_sensitivity(w, g)
+    assert sorted(calls) == [8, 16]  # no third (dead) 8-bit call
+
+    # the clamp reproduces max(s_16, s_8) with s_8 == 0 exactly
+    base = real(w, 8)
+    s_16 = (base - real(w, 16)) * jnp.linalg.norm(g) / w.size
+    s_8 = (base - real(w, 8)) * jnp.linalg.norm(g) / w.size
+    assert float(s_8) == 0.0
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(jnp.maximum(s_16, s_8)))
