@@ -46,6 +46,37 @@ def _conv_layer_fused(x, w, bias):
     return ops.conv1d_fused(x, w, bias, act="relu")
 
 
+def bench_frontend():
+    """DSP front-end microbench: per-window numpy loop (float64 oracle) vs
+    the batched float32 JAX front-end that serves fused into the accelerator
+    program, per feature kind."""
+    from repro.data import features, features_jax
+
+    rng = np.random.default_rng(2)
+    b = 8 if _smoke() else 64
+    w = rng.standard_normal((b, features.N_SAMPLES)).astype(np.float32)
+    kinds = ("mfcc20",) if _smoke() else sorted(features.FEATURE_DIMS)
+    wj = jnp.asarray(w)
+    for kind in kinds:
+        us_np = time_call(features.batch_features, w, kind, warmup=1, iters=3)
+        row(
+            f"kernels/frontend_numpy_{kind}_B{b}",
+            f"{us_np:.0f}",
+            f"per-window numpy float64 loop (the serving oracle), {b} windows",
+        )
+        us_jax = time_call(
+            lambda a, k=kind: features_jax.batch_features_jax(a, k),
+            wj, warmup=1, iters=3,
+        )
+        row(
+            f"kernels/frontend_jax_{kind}_B{b}",
+            f"{us_jax:.0f}",
+            f"batched float32 JAX front-end (per-row bits), {b} windows; "
+            f"{us_np / us_jax:.2f}x vs numpy loop",
+            speedup_vs_numpy=round(us_np / us_jax, 3),
+        )
+
+
 def bench_conv_paths():
     rng = np.random.default_rng(1)
     b = 8 if _smoke() else 64
@@ -98,6 +129,7 @@ def main():
         )
 
     bench_conv_paths()
+    bench_frontend()
 
     # SMOKE is a health check, not a measurement: skip the sign-off (training
     # the detector artifact blows the smoke budget) and don't clobber the

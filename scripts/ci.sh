@@ -28,7 +28,7 @@ case "${1:-}" in
   --cov)
     if python -c "import pytest_cov" 2>/dev/null; then
       COV=(--cov=repro.serving --cov=repro.core.pruning
-           --cov=repro.core.precision_policy
+           --cov=repro.core.precision_policy --cov=repro.data.features_jax
            --cov-report=term-missing --cov-fail-under=85)
     else
       echo "ci: pytest-cov unavailable (offline container); running without coverage" >&2
@@ -52,3 +52,7 @@ python -m repro.launch.monitor --seconds 2 --shards 2 --random
 # monitor driver (random weights: plumbing only, fast).
 python -m repro.launch.monitor --seconds 2 --prune 2 \
   --policy "conv0/w=bf16,dense1/w=fp32" --random
+
+# On-device front-end smoke: raw-window dispatch with the DSP front-end
+# fused into the jitted program (random weights: plumbing only, fast).
+python -m repro.launch.monitor --seconds 2 --device-features --random

@@ -54,6 +54,11 @@ def build_cells(params):
         "pruned_mixed": quantize_params(
             params, CFG, mode="int8", prune=spec, policy=mixed
         ),
+        # on-device-features cell: the DSP front-end is part of the deployed
+        # program, so its numerics are part of the pinned surface too
+        "int8_ondevice": quantize_params(
+            params, CFG, mode="int8", feature_kind="zcr"
+        ),
     }
 
 
@@ -64,11 +69,19 @@ def main():
     x = rng.standard_normal((N_ROWS, CFG.input_len)).astype(np.float32)
     x *= (10.0 ** rng.uniform(-2, 2, size=(N_ROWS, 1))).astype(np.float32)
     np.save(GOLDEN / "input.npy", x)
+    # raw 0.8 s windows for the on-device-features cell (fused front-end)
+    w = rng.standard_normal((N_ROWS, features.N_SAMPLES)).astype(np.float32)
+    w *= (10.0 ** rng.uniform(-2, 2, size=(N_ROWS, 1))).astype(np.float32)
+    np.save(GOLDEN / "input_windows.npy", w)
     for name, qp in build_cells(params).items():
         save_artifact(GOLDEN / f"detector_{name}.npz", qp)
+        raw = qp.feature_kind is not None
         # interpret=True: the expected numbers are the interpreter-mode (CPU
         # reference) numerics, the sign-off surface the tests replay.
-        probs = accelerator_forward(qp, jnp.asarray(x), CFG, interpret=True)
+        probs = accelerator_forward(
+            qp, jnp.asarray(w if raw else x), CFG,
+            interpret=True, raw_windows=raw,
+        )
         np.save(GOLDEN / f"expected_{name}.npy", np.asarray(probs))
         print(f"golden: wrote detector_{name}.npz + expected_{name}.npy")
     print(f"golden: artifacts under {GOLDEN}")

@@ -41,9 +41,15 @@ def frame_signal(x: np.ndarray, n_fft: int = N_FFT, hop: int = HOP) -> np.ndarra
     return xp[idx]
 
 
+@functools.lru_cache(maxsize=8)
+def _hann(n: int) -> np.ndarray:
+    """Cached Hann window (np.hanning rebuilds a cosine table per call)."""
+    return np.hanning(n)
+
+
 def stft_power(x: np.ndarray, n_fft: int = N_FFT, hop: int = HOP) -> np.ndarray:
     """Power spectrogram, shape (frames, n_fft//2+1)."""
-    frames = frame_signal(x, n_fft, hop) * np.hanning(n_fft)[None, :]
+    frames = frame_signal(x, n_fft, hop) * _hann(n_fft)[None, :]
     spec = np.fft.rfft(frames, axis=-1)
     return np.abs(spec) ** 2
 
@@ -79,8 +85,11 @@ def melspectrogram(x: np.ndarray, n_mels: int) -> np.ndarray:
     return np.log10(mel + 1e-10)
 
 
+@functools.lru_cache(maxsize=8)
 def dct_ii(n_out: int, n_in: int) -> np.ndarray:
-    """Orthonormal DCT-II matrix (n_out, n_in)."""
+    """Orthonormal DCT-II matrix (n_out, n_in); cached like mel_filterbank
+    (rebuilt per *window* otherwise — the oracle path shouldn't be
+    gratuitously slow)."""
     k = np.arange(n_out)[:, None]
     n = np.arange(n_in)[None, :]
     m = np.cos(np.pi * k * (2 * n + 1) / (2 * n_in))
@@ -98,7 +107,7 @@ def welch_psd(x: np.ndarray, n_bins: int = 512) -> np.ndarray:
     """Welch-averaged log10 PSD, length n_bins."""
     seg = 2 * n_bins
     n_seg = len(x) // seg
-    segs = x[: n_seg * seg].reshape(n_seg, seg) * np.hanning(seg)[None, :]
+    segs = x[: n_seg * seg].reshape(n_seg, seg) * _hann(seg)[None, :]
     p = np.mean(np.abs(np.fft.rfft(segs, axis=-1)) ** 2, axis=0)[:n_bins]
     return np.log10(p + 1e-10)
 

@@ -91,6 +91,10 @@ def main(argv=None):
                          "(sharded-batch dispatch; bitwise-identical results)")
     ap.add_argument("--feature", default=None, choices=sorted(features.FEATURE_DIMS),
                     help="feature set (default: psd, or mfcc20 with --trained)")
+    ap.add_argument("--device-features", action="store_true",
+                    help="fuse the DSP front-end into the jitted device "
+                         "program (engine submits raw windows; no host "
+                         "feature extraction on the serving path)")
     ap.add_argument("--slots", type=int, default=8, help="micro-batch slot count")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--random", action="store_true",
@@ -145,6 +149,7 @@ def main(argv=None):
         params, cfg,
         n_streams=args.streams,
         feature_kind=args.feature,
+        on_device_features=args.device_features,
         batch_slots=args.slots,
         precision=args.precision,
         prune=prune_spec,
@@ -153,6 +158,8 @@ def main(argv=None):
     )
     if args.shards:
         print(f"monitor: sharded dispatch over {engine.shards} device(s)")
+    if args.device_features:
+        print(f"monitor: on-device {args.feature} front-end (raw-window dispatch)")
 
     rng = np.random.default_rng(args.seed + 1)
     scenes, truths = zip(*(synth_scene(args.duration, rng) for _ in range(args.streams)))

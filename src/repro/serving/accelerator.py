@@ -35,6 +35,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.data import features_jax
 from repro.distributed.sharding import STREAM_AXIS
 from repro.kernels import ops
 from repro.kernels.backend import resolve_interpret
@@ -58,10 +59,22 @@ def _conv1d_float(x: jax.Array, w: jax.Array) -> jax.Array:
     )
 
 
-@functools.partial(jax.jit, static_argnames=("interpret", "per_sample_acts"))
+@functools.partial(
+    jax.jit, static_argnames=("interpret", "per_sample_acts", "raw_windows")
+)
 def _forward_quantized(
-    qp: QuantizedParams, x: jax.Array, interpret: bool, per_sample_acts: bool
+    qp: QuantizedParams,
+    x: jax.Array,
+    interpret: bool,
+    per_sample_acts: bool,
+    raw_windows: bool = False,
 ) -> jax.Array:
+    # Fused DSP front-end: with raw_windows the program starts at the
+    # microphone samples — feature extraction runs in-graph (per-row, see
+    # features_jax) ahead of the quantised datapath, so host feature work
+    # never serializes with device dispatch.
+    if raw_windows:
+        x = features_jax.feature_rows(x, qp.feature_kind)
     # Per-sample (row-wise) activation scales are the default: with one
     # per-tensor scale, a single loud sample crushes the quantisation
     # resolution of every co-batched quiet one — exactly the failure mode
@@ -125,6 +138,27 @@ def _forward_quantized(
     return ops.cordic_softmax(h, interpret=interpret)
 
 
+def _check_raw_windows(qp: QuantizedParams, x: jax.Array, feature_kind: str | None):
+    """Validate the raw-window contract before tracing (clear errors beat
+    shape mismatches inside jit)."""
+    if qp.feature_kind is None:
+        raise ValueError(
+            "raw_windows=True needs an artifact with a baked feature kind; "
+            "re-bake with quantize_params(..., feature_kind=...) or pass "
+            "feature_kind= alongside the fp32 checkpoint"
+        )
+    if feature_kind is not None and feature_kind != qp.feature_kind:
+        raise ValueError(
+            f"artifact was baked for feature kind {qp.feature_kind!r}, "
+            f"got feature_kind={feature_kind!r}"
+        )
+    if x.ndim != 2 or x.shape[1] != features_jax.N_SAMPLES:
+        raise ValueError(
+            f"raw_windows=True expects (B, {features_jax.N_SAMPLES}) raw "
+            f"0.8 s windows, got {tuple(x.shape)}"
+        )
+
+
 def accelerator_forward(
     params: dict | QuantizedParams,
     x: jax.Array,
@@ -133,6 +167,8 @@ def accelerator_forward(
     fxp: bool = False,
     interpret: bool | None = None,
     per_sample_acts: bool = True,
+    raw_windows: bool = False,
+    feature_kind: str | None = None,
 ) -> jax.Array:
     """x: (B, M) features -> (B, n_classes) class probabilities, computed
     entirely on the kernel datapath.
@@ -143,6 +179,14 @@ def accelerator_forward(
     ``params`` dict is quantised on the fly (``fxp`` selects the mode) for
     one-off sign-offs.
 
+    ``raw_windows=True`` accepts raw (B, 12800) 0.8 s audio windows instead
+    of features: the artifact's baked ``feature_kind`` front-end runs
+    in-graph as the first stage of the same jitted program (windows -> probs
+    end to end).  Feature bits are per-row by construction, so every parity
+    guarantee (streaming == batched == sharded) carries over; note the JAX
+    front-end is the float32 twin of the numpy oracle — tolerance-bounded,
+    not bitwise, against host-extracted features.
+
     ``per_sample_acts`` (default) quantises activations with one scale per
     batch row; ``False`` restores the legacy per-tensor scale (kept as the
     A/B surface for the mixed-loudness regression tests).
@@ -150,12 +194,21 @@ def accelerator_forward(
     if isinstance(params, QuantizedParams):
         qp = params
     else:
-        qp = quantize_params(params, cfg, mode="fxp8" if fxp else "int8")
-    return _forward_quantized(qp, x, resolve_interpret(interpret), per_sample_acts)
+        qp = quantize_params(
+            params, cfg, mode="fxp8" if fxp else "int8", feature_kind=feature_kind
+        )
+    if raw_windows:
+        _check_raw_windows(qp, x, feature_kind)
+    return _forward_quantized(
+        qp, x, resolve_interpret(interpret), per_sample_acts, raw_windows
+    )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("mesh", "axis_name", "interpret", "per_sample_acts")
+    jax.jit,
+    static_argnames=(
+        "mesh", "axis_name", "interpret", "per_sample_acts", "raw_windows"
+    ),
 )
 def _forward_sharded(
     qp: QuantizedParams,
@@ -164,9 +217,16 @@ def _forward_sharded(
     axis_name: str,
     interpret: bool,
     per_sample_acts: bool,
+    raw_windows: bool = False,
 ) -> jax.Array:
+    # raw_windows shards the *windows*: each device runs the DSP front-end
+    # shard-local on its own rows (per-row feature bits make this exactly the
+    # unsharded computation), then its slice of the quantised datapath.
     fwd = functools.partial(
-        _forward_quantized, interpret=interpret, per_sample_acts=per_sample_acts
+        _forward_quantized,
+        interpret=interpret,
+        per_sample_acts=per_sample_acts,
+        raw_windows=raw_windows,
     )
     return shard_map(
         fwd,
@@ -186,6 +246,8 @@ def accelerator_forward_sharded(
     axis_name: str = STREAM_AXIS,
     fxp: bool = False,
     interpret: bool | None = None,
+    raw_windows: bool = False,
+    feature_kind: str | None = None,
 ) -> jax.Array:
     """Sharded-batch twin of :func:`accelerator_forward`: the batch dimension
     is split along ``mesh``'s ``axis_name`` axis, weights stay replicated,
@@ -205,6 +267,11 @@ def accelerator_forward_sharded(
     unchanged — the float layer modes compute each row independently, so the
     bitwise guarantee extends to every artifact cell (conformance-pinned).
 
+    ``raw_windows=True`` shards raw (B, 12800) windows instead of features:
+    each device runs the fused DSP front-end on its own rows (shard-local,
+    per-row bits) before its slice of the datapath — bitwise identical to
+    the unsharded raw-window forward.
+
     ``x.shape[0]`` must divide evenly by the shard count.
     """
     n_shards = mesh.shape[axis_name]
@@ -216,9 +283,13 @@ def accelerator_forward_sharded(
     if isinstance(params, QuantizedParams):
         qp = params
     else:
-        qp = quantize_params(params, cfg, mode="fxp8" if fxp else "int8")
+        qp = quantize_params(
+            params, cfg, mode="fxp8" if fxp else "int8", feature_kind=feature_kind
+        )
+    if raw_windows:
+        _check_raw_windows(qp, x, feature_kind)
     return _forward_sharded(
-        qp, x, mesh, axis_name, resolve_interpret(interpret), True
+        qp, x, mesh, axis_name, resolve_interpret(interpret), True, raw_windows
     )
 
 

@@ -150,6 +150,15 @@ class MonitorEngine:
     precision policy into the served artifact at construction time — the
     engine then serves the paper's deployed configuration (pruned flatten,
     mixed per-layer modes) with every parity guarantee intact.
+
+    ``on_device_features=True`` fuses the DSP front-end into the jitted
+    program: the engine submits raw ``(slots, 12800)`` window blocks and the
+    artifact's baked ``feature_kind`` front-end runs in-graph, so host
+    feature extraction no longer serializes with the double-buffered device
+    dispatch.  The numpy front-end stays the oracle: its float64 features
+    differ from the in-graph float32 ones within a per-kind tolerance
+    (``features_jax.PARITY_ATOL``), while all *within-JAX* parity guarantees
+    (streaming == batched == sharded) remain bitwise.
     """
 
     def __init__(
@@ -159,6 +168,7 @@ class MonitorEngine:
         *,
         n_streams: int,
         feature_kind: str = "mfcc20",
+        on_device_features: bool = False,
         hop_samples: int | None = None,
         batch_slots: int = 8,
         precision: str = "int8",
@@ -182,13 +192,18 @@ class MonitorEngine:
         self.cfg = cfg
         self.n_streams = n_streams
         self.feature_kind = feature_kind
+        self.on_device_features = on_device_features
         self.batch_slots = batch_slots
         self.window = features.N_SAMPLES
         self.hop = hop_samples if hop_samples is not None else features.N_SAMPLES
+        # Width of one micro-batch row: raw samples when the front-end is
+        # fused into the device program, extracted features otherwise.
+        self._in_width = features.N_SAMPLES if on_device_features else cfg.input_len
         self._interpret = resolve_interpret(interpret)
         # The served artifact: either pre-baked, or baked here from the fp32
         # checkpoint with the deployment decisions (default precision, prune
-        # spec, per-layer policy) applied at quantise-once time.
+        # spec, per-layer policy, fused front-end) applied at quantise-once
+        # time.
         if isinstance(params, QuantizedParams):
             if prune is not None or policy is not None:
                 raise ValueError(
@@ -196,10 +211,18 @@ class MonitorEngine:
                     "applied to an already-baked QuantizedParams artifact; "
                     "pass the fp32 checkpoint instead"
                 )
+            if on_device_features and params.feature_kind != feature_kind:
+                raise ValueError(
+                    f"on_device_features=True needs an artifact baked for "
+                    f"feature kind {feature_kind!r}, got "
+                    f"{params.feature_kind!r}; re-bake with "
+                    f"quantize_params(..., feature_kind={feature_kind!r})"
+                )
             self._qp = params
         else:
             self._qp = quantize_params(
-                params, cfg, mode=precision, prune=prune, policy=policy
+                params, cfg, mode=precision, prune=prune, policy=policy,
+                feature_kind=feature_kind if on_device_features else None,
             )
         # Sharded-batch dispatch: split each fixed-slot block along a 1-D
         # device mesh ("streams" axis), weights replicated.  `shards=None`
@@ -247,16 +270,29 @@ class MonitorEngine:
             exit_threshold=exit_threshold,
             min_duration=min_duration,
         )
+        # Reused dispatch buffers: one fixed-slot block per inflight depth
+        # plus one being packed.  jax.device_put on CPU may alias host memory
+        # zero-copy, so a block must never be rewritten while its dispatch is
+        # still in flight — rotating over ``inflight + 1`` buffers guarantees
+        # the buffer being packed is (inflight + 1) submissions old, and at
+        # most ``inflight`` submissions are ever unharvested.
+        self._blocks = np.zeros(
+            (self._inflight + 1, batch_slots, self._in_width), np.float32
+        )
+        self._block_i = 0
         # observability counters for the bench / driver
         self.windows_scored = 0
         self.forward_calls = 0
         self.padded_slots = 0
+        self._dropped_samples = 0  # maintained incrementally by push()
 
     # -- ingest --------------------------------------------------------------
 
     def push(self, stream: int, samples: np.ndarray) -> int:
         """Append raw audio to one stream; returns samples dropped (overflow)."""
-        return self._rings[stream].push(samples)
+        dropped = self._rings[stream].push(samples)
+        self._dropped_samples += dropped
+        return dropped
 
     def ready_windows(self) -> np.ndarray:
         """Per-stream count of complete, unscored windows."""
@@ -264,7 +300,7 @@ class MonitorEngine:
 
     @property
     def dropped_samples(self) -> int:
-        return sum(r.dropped for r in self._rings)
+        return self._dropped_samples
 
     # -- scoring -------------------------------------------------------------
 
@@ -272,36 +308,47 @@ class MonitorEngine:
         """Dispatch one fixed-slot block; returns the in-flight device buffer
         (jax dispatch is async — this does not wait for the result)."""
         x = jnp.asarray(block)
+        raw = self.on_device_features
         if self._mesh is not None:
             return accelerator_forward_sharded(
                 self._qp, x, self.cfg, mesh=self._mesh,
                 axis_name=self._mesh_axis, interpret=self._interpret,
+                raw_windows=raw,
             )
         return accelerator_forward(
-            self._qp, x, self.cfg, interpret=self._interpret
+            self._qp, x, self.cfg, interpret=self._interpret, raw_windows=raw
         )
 
-    def _forward(self, feats: np.ndarray) -> np.ndarray:
-        """Micro-batch (n, M) features through fixed-size jit slots.
+    def _forward(self, rows: np.ndarray) -> np.ndarray:
+        """Micro-batch (n, row_width) inputs — features, or raw windows when
+        the front-end is fused — through fixed-size jit slots.
 
         Double-buffered: block N+1 is submitted while block N's device
         buffers are still in flight; the explicit ``block_until_ready`` sits
         at harvest time, not submit time, so device compute and host-side
-        packing of the next block overlap.
+        packing of the next block overlap.  Blocks come from the
+        preallocated ``self._blocks`` rotation (no per-chunk allocation);
+        only a partial chunk's dead-slot tail is re-zeroed, full blocks are
+        overwritten outright.
         """
-        n = len(feats)
+        n = len(rows)
         probs = np.empty((n, self.cfg.n_classes), np.float32)
         pending: collections.deque[tuple[int, int, jax.Array]] = collections.deque()
 
         def harvest():
+            # block_until_ready means the device has consumed the input
+            # block too, so its buffer is safe to rewrite on a later turn.
             start, n_valid, buf = pending.popleft()
             out = np.asarray(buf.block_until_ready())
             probs[start : start + n_valid] = out[:n_valid]
 
         for start in range(0, n, self.batch_slots):
-            chunk = feats[start : start + self.batch_slots]
-            block = np.zeros((self.batch_slots, self.cfg.input_len), np.float32)
-            block[: len(chunk)] = chunk  # dead slots carry silence
+            chunk = rows[start : start + self.batch_slots]
+            block = self._blocks[self._block_i]
+            self._block_i = (self._block_i + 1) % len(self._blocks)
+            block[: len(chunk)] = chunk
+            if len(chunk) < self.batch_slots:
+                block[len(chunk):] = 0.0  # dead slots carry silence
             pending.append((start, len(chunk), self._submit(block)))
             self.forward_calls += 1
             self.padded_slots += self.batch_slots - len(chunk)
@@ -326,8 +373,12 @@ class MonitorEngine:
                 wins.append(w)
         if not ids:
             return []
-        feats = features.batch_features(np.stack(wins), self.feature_kind)
-        p_uav = self._forward(feats)[:, 1]
+        stacked = np.stack(wins)
+        if self.on_device_features:
+            rows = stacked  # raw windows; the front-end runs in-graph
+        else:
+            rows = features.batch_features(stacked, self.feature_kind)
+        p_uav = self._forward(rows)[:, 1]
         full = np.zeros(self.n_streams, np.float64)
         mask = np.zeros(self.n_streams, bool)
         full[ids] = p_uav  # exact float32 -> float64 widening

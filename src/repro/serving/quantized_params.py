@@ -19,6 +19,12 @@ are baked in at quantise-once time:
 * **layout** — conv weights per-output-channel on axis 2, dense weights on
   axis 1, biases kept fp32 for the epilogue adder.
 
+A fourth, optional decision is the **DSP front-end**: ``feature_kind`` bakes
+the feature set the model was trained on into the artifact, so the jitted
+serving program can start at raw 0.8 s audio windows
+(``accelerator_forward(..., raw_windows=True)``) instead of host-extracted
+features.
+
 ``QuantizedParamsCache`` memoises one artifact per (mode, prune, policy)
 cell over a fp32 checkpoint; ``save_artifact``/``load_artifact`` round-trip
 an artifact through one ``.npz`` file (the golden-artifact conformance
@@ -67,6 +73,10 @@ class QuantizedParams:
     conv_modes: tuple[str, ...] | None = None  # per-layer tags (None = uniform)
     dense_modes: tuple[str, ...] | None = None
     keep_frames: int | None = None  # frames kept before flatten (None = all)
+    #: DSP front-end baked into the serving program: when set, the artifact
+    #: may be served on raw 0.8 s windows (``raw_windows=True``) and the
+    #: jitted forward prepends repro.data.features_jax for this kind.
+    feature_kind: str | None = None
 
     @property
     def fxp(self) -> bool:
@@ -94,9 +104,11 @@ jax.tree_util.register_pytree_node(
     QuantizedParams,
     lambda p: (
         (p.convs, p.denses),
-        (p.mode, p.conv_modes, p.dense_modes, p.keep_frames),
+        (p.mode, p.conv_modes, p.dense_modes, p.keep_frames, p.feature_kind),
     ),
-    lambda aux, kids: QuantizedParams(aux[0], kids[0], kids[1], aux[1], aux[2], aux[3]),
+    lambda aux, kids: QuantizedParams(
+        aux[0], kids[0], kids[1], aux[1], aux[2], aux[3], aux[4]
+    ),
 )
 
 
@@ -123,6 +135,7 @@ def quantize_params(
     mode: str = "int8",
     prune: PruneSpec | None = None,
     policy: PrecisionPolicy | None = None,
+    feature_kind: str | None = None,
 ) -> QuantizedParams:
     """Bake a trained fp32 checkpoint into one serving artifact.
 
@@ -131,9 +144,23 @@ def quantize_params(
     same paths the emulation forward uses).  ``prune`` physically removes the
     planned conv-out channels and dense rows *before* quantisation — scales
     are computed on the surviving weights, and the artifact remembers the
-    boundary-frame trim in ``keep_frames``.
+    boundary-frame trim in ``keep_frames``.  ``feature_kind`` bakes the DSP
+    front-end the model was trained on into the artifact, enabling
+    raw-window serving (the jitted forward then starts at the microphone
+    samples, not the host-extracted features).
     """
     assert mode in MODES, mode
+    if feature_kind is not None:
+        from repro.data.features import FEATURE_DIMS
+
+        if feature_kind not in FEATURE_DIMS:
+            raise ValueError(f"unknown feature kind {feature_kind!r}")
+        if FEATURE_DIMS[feature_kind] != cfg.input_len:
+            raise ValueError(
+                f"feature kind {feature_kind!r} yields "
+                f"{FEATURE_DIMS[feature_kind]}-dim vectors but the model "
+                f"takes input_len {cfg.input_len}"
+            )
     n_convs = len(cfg.channels)
     names = [f"conv{i}" for i in range(n_convs)] + ["dense0", "dense1"]
     if policy is None:
@@ -195,6 +222,7 @@ def quantize_params(
         conv_modes=tuple(modes[f"conv{i}"] for i in range(n_convs)),
         dense_modes=(modes["dense0"], modes["dense1"]),
         keep_frames=keep_frames,
+        feature_kind=feature_kind,
     )
 
 
@@ -231,6 +259,7 @@ def save_artifact(path, qp: QuantizedParams) -> None:
         "conv_modes": list(conv_modes),
         "dense_modes": list(dense_modes),
         "keep_frames": qp.keep_frames,
+        "feature_kind": qp.feature_kind,
         "scale_axes": {},
     }
     for kind, layers, modes in (
@@ -286,6 +315,8 @@ def load_artifact(path) -> QuantizedParams:
         conv_modes=tuple(meta["conv_modes"]),
         dense_modes=tuple(meta["dense_modes"]),
         keep_frames=meta["keep_frames"],
+        # .get(): pre-front-end artifacts (same version) lack the key
+        feature_kind=meta.get("feature_kind"),
     )
 
 
@@ -310,14 +341,17 @@ class QuantizedParamsCache:
         *,
         prune: PruneSpec | None = None,
         policy: PrecisionPolicy | None = None,
+        feature_kind: str | None = None,
     ) -> QuantizedParams:
         cell = (
             mode,
             prune.cache_key if prune is not None else None,
             policy.to_json() if policy is not None else None,
+            feature_kind,
         )
         if cell not in self._by_cell:
             self._by_cell[cell] = quantize_params(
-                self._params, self._cfg, mode=mode, prune=prune, policy=policy
+                self._params, self._cfg, mode=mode, prune=prune,
+                policy=policy, feature_kind=feature_kind,
             )
         return self._by_cell[cell]

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.data.features import FEATURE_DIMS
 from repro.models import cnn1d
 from repro.serving.accelerator import accelerator_forward
 from repro.serving.quantized_params import load_artifact
@@ -29,12 +30,18 @@ def _cfg(input_len: int) -> cnn1d.CNNConfig:
     return cnn1d.CNNConfig(input_len=input_len, channels=(4, 8), hidden=8)
 
 
-@pytest.mark.parametrize("name", ["int8", "pruned_mixed"])
+@pytest.mark.parametrize("name", ["int8", "pruned_mixed", "int8_ondevice"])
 def test_golden_artifact_numerics_pinned(name):
-    x = np.load(GOLDEN / "input.npy")
+    # the on-device cell replays raw 0.8 s windows through the fused
+    # front-end + datapath program; the others replay extracted features
+    raw = name.endswith("_ondevice")
+    x = np.load(GOLDEN / ("input_windows.npy" if raw else "input.npy"))
     qp = load_artifact(GOLDEN / f"detector_{name}.npz")
+    cfg = _cfg(FEATURE_DIMS[qp.feature_kind] if raw else x.shape[1])
     got = np.asarray(
-        accelerator_forward(qp, jnp.asarray(x), _cfg(x.shape[1]), interpret=True)
+        accelerator_forward(
+            qp, jnp.asarray(x), cfg, interpret=True, raw_windows=raw
+        )
     )
     want = np.load(GOLDEN / f"expected_{name}.npy")
     if not np.array_equal(got, want):
@@ -59,3 +66,8 @@ def test_golden_artifact_metadata():
     assert deploy.keep_frames == 31
     assert deploy.convs[-1]["b"].shape == (3,)
     assert deploy.denses[0]["w"].shape == (31 * 3, 8)
+    # pre-front-end artifacts carry no baked feature kind...
+    assert plain.feature_kind is None and deploy.feature_kind is None
+    # ...the on-device cell does (it is what makes raw-window serving legal)
+    ondev = load_artifact(GOLDEN / "detector_int8_ondevice.npz")
+    assert ondev.feature_kind == "zcr" and not ondev.mixed and not ondev.pruned

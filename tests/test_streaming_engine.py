@@ -156,6 +156,132 @@ def test_engine_micro_batching_pads_dead_slots():
     assert engine.step() == []  # nothing left buffered
 
 
+def test_engine_on_device_features_streaming_parity():
+    """Fused front-end leg of the parity guarantee: raw windows streamed
+    through the engine in uneven chunks == one batched raw-window forward,
+    bitwise — the feature bits are per-row inside the jitted program."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(9)
+    n_streams, n_win = 3, 4
+    audio = rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+    audio *= (10.0 ** rng.uniform(-2, 2, size=(n_streams, 1))).astype(np.float32)
+
+    engine = MonitorEngine(
+        params, cfg, n_streams=n_streams, feature_kind="zcr",
+        on_device_features=True, batch_slots=2, **TRACK_KW,
+    )
+    cursors = [0] * n_streams
+    scores: dict[int, list[float]] = {s: [] for s in range(n_streams)}
+    while any(c < audio.shape[1] for c in cursors):
+        for s in range(n_streams):
+            n = int(rng.uniform(0.2, 1.9) * features.N_SAMPLES)
+            engine.push(s, audio[s, cursors[s] : cursors[s] + n])
+            cursors[s] += n
+        for ws in engine.step():
+            scores[ws.stream].append(ws.p_uav)
+    for ws in engine.drain():
+        scores[ws.stream].append(ws.p_uav)
+
+    qp = engine._qp
+    assert qp.feature_kind == "zcr"
+    for s in range(n_streams):
+        wins = jnp.asarray(audio[s].reshape(n_win, features.N_SAMPLES))
+        probs = np.asarray(
+            accelerator_forward(qp, wins, cfg, raw_windows=True)
+        )[:, 1]
+        np.testing.assert_array_equal(
+            np.asarray(scores[s], np.float64), probs.astype(np.float64)
+        )
+
+
+def test_engine_on_device_equals_manual_two_stage():
+    """Fusion correctness: the in-graph front-end feeding the datapath is
+    bitwise the same as extracting JAX features first and forwarding them."""
+    from repro.data import features_jax
+
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(2)
+    wins = rng.standard_normal((4, features.N_SAMPLES)).astype(np.float32)
+    engine = MonitorEngine(
+        params, cfg, n_streams=4, feature_kind="zcr",
+        on_device_features=True, batch_slots=4,
+    )
+    for s in range(4):
+        engine.push(s, wins[s])
+    scored = engine.step()
+    feats = features_jax.batch_features_jax(wins, "zcr")
+    two_stage = np.asarray(accelerator_forward(engine._qp, feats, cfg))[:, 1]
+    got = np.asarray([ws.p_uav for ws in sorted(scored, key=lambda w: w.stream)])
+    np.testing.assert_array_equal(got, two_stage.astype(np.float64))
+
+
+def test_engine_rejects_artifact_without_feature_kind():
+    """on_device_features needs the front-end baked into the artifact — a
+    plain artifact must be rejected, not silently served on raw samples."""
+    cfg, params = _small_detector()
+    qp = cnn1d.export_quantized(params, cfg, mode="int8")
+    assert qp.feature_kind is None
+    with pytest.raises(ValueError, match="baked for"):
+        MonitorEngine(
+            qp, cfg, n_streams=1, feature_kind="zcr", on_device_features=True
+        )
+
+
+def test_engine_block_buffer_reuse_is_invisible():
+    """The preallocated rotating dispatch buffers must behave exactly like
+    the old fresh-np.zeros-per-chunk blocks: many rounds with varying ready
+    counts (full blocks, partial tails after full blocks) stay bitwise equal
+    to a per-stream batched reference, for both inflight depths."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(4)
+    n_streams, n_win = 5, 4
+    audio = rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+    ref = {}
+    for s in range(n_streams):
+        feats = features.batch_features(
+            audio[s].reshape(n_win, features.N_SAMPLES), "zcr"
+        )
+        ref[s] = np.asarray(
+            accelerator_forward(params, jnp.asarray(feats), cfg)
+        )[:, 1].astype(np.float64)
+    for inflight in (1, 2):
+        engine = MonitorEngine(
+            params, cfg, n_streams=n_streams, feature_kind="zcr",
+            batch_slots=2, inflight=inflight,
+        )
+        # round 1 fills both slots of the last block (5 ready -> 2+2+1: the
+        # stale-tail case), later rounds rewrite previously-padded buffers
+        scores: dict[int, list[float]] = {s: [] for s in range(n_streams)}
+        for w in range(n_win):
+            for s in range(n_streams):
+                engine.push(s, audio[s, w * features.N_SAMPLES : (w + 1) * features.N_SAMPLES])
+        for ws in engine.drain():
+            scores[ws.stream].append(ws.p_uav)
+        for s in range(n_streams):
+            np.testing.assert_array_equal(np.asarray(scores[s], np.float64), ref[s])
+
+
+def test_engine_dropped_samples_incremental_counter():
+    """dropped_samples is maintained incrementally by push() and agrees with
+    the per-ring ground truth."""
+    cfg, params = _small_detector()
+    engine = MonitorEngine(
+        params, cfg, n_streams=2, feature_kind="zcr", capacity_windows=2
+    )
+    rng = np.random.default_rng(0)
+    assert engine.dropped_samples == 0
+    # overflow stream 0: capacity is 2 windows; push 4 windows' worth
+    d = engine.push(0, rng.standard_normal(4 * features.N_SAMPLES).astype(np.float32))
+    assert d > 0
+    assert engine.dropped_samples == d == sum(r.dropped for r in engine._rings)
+    d2 = engine.push(1, rng.standard_normal(3 * features.N_SAMPLES).astype(np.float32))
+    assert engine.dropped_samples == d + d2 == sum(r.dropped for r in engine._rings)
+
+
 def test_engine_serves_from_quantized_artifact():
     """Engine construction from a pre-quantised artifact does zero extra
     weight-quantisation work at serve time."""
