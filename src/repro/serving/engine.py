@@ -63,7 +63,17 @@ class StreamRing:
     """
 
     def __init__(self, window: int, hop: int, capacity_windows: int = 8):
-        assert window > 0 and 0 < hop and capacity_windows >= 1
+        # Real exceptions, not asserts: ingest validation must survive
+        # ``python -O`` — an always-on monitor is exactly the deployment
+        # where optimised bytecode would silently skip the checks.
+        if window <= 0:
+            raise ValueError(f"window must be positive, got {window}")
+        if hop <= 0:
+            raise ValueError(f"hop must be positive, got {hop}")
+        if capacity_windows < 1:
+            raise ValueError(
+                f"capacity_windows must be >= 1, got {capacity_windows}"
+            )
         self.window = window
         self.hop = hop
         self.capacity = window + (capacity_windows - 1) * hop
@@ -111,14 +121,29 @@ class StreamRing:
         self._w += len(x)
         return dropped
 
-    def pop_window(self) -> np.ndarray | None:
-        """Next hop-aligned window, or None if fewer than ``window`` samples
-        are buffered."""
+    def peek_window(self) -> np.ndarray | None:
+        """Next hop-aligned window *without* consuming it, or None if fewer
+        than ``window`` samples are buffered.  Pair with :meth:`advance` once
+        the window has actually been scored — the transactional round
+        protocol the monitor engine uses so a failed forward never loses a
+        window."""
         if self._w - self._r < self.window:
             return None
         idx = (self._r + np.arange(self.window)) % self.capacity
-        out = self._buf[idx].copy()
+        return self._buf[idx].copy()
+
+    def advance(self):
+        """Consume one hop off the front (commit the last peeked window)."""
+        if self._w - self._r < self.window:
+            raise ValueError("advance() without a complete window buffered")
         self._r += self.hop
+
+    def pop_window(self) -> np.ndarray | None:
+        """Next hop-aligned window, or None if fewer than ``window`` samples
+        are buffered."""
+        out = self.peek_window()
+        if out is not None:
+            self._r += self.hop
         return out
 
 
@@ -184,11 +209,15 @@ class MonitorEngine:
         exit_threshold: float = 0.35,
         min_duration: int = 2,
     ):
-        assert cfg.input_len == features.FEATURE_DIMS[feature_kind], (
-            f"model input_len {cfg.input_len} != "
-            f"{feature_kind} feature dim {features.FEATURE_DIMS[feature_kind]}"
-        )
-        assert n_streams >= 1 and batch_slots >= 1
+        if cfg.input_len != features.FEATURE_DIMS[feature_kind]:
+            raise ValueError(
+                f"model input_len {cfg.input_len} != {feature_kind} feature "
+                f"dim {features.FEATURE_DIMS[feature_kind]}"
+            )
+        if n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+        if batch_slots < 1:
+            raise ValueError(f"batch_slots must be >= 1, got {batch_slots}")
         self.cfg = cfg
         self.n_streams = n_streams
         self.feature_kind = feature_kind
@@ -290,6 +319,11 @@ class MonitorEngine:
 
     def push(self, stream: int, samples: np.ndarray) -> int:
         """Append raw audio to one stream; returns samples dropped (overflow)."""
+        if not 0 <= stream < self.n_streams:
+            raise ValueError(
+                f"stream index {stream} out of range for an engine with "
+                f"{self.n_streams} stream(s) (valid: 0..{self.n_streams - 1})"
+            )
         dropped = self._rings[stream].push(samples)
         self._dropped_samples += dropped
         return dropped
@@ -361,13 +395,20 @@ class MonitorEngine:
     def step(self) -> list[WindowScore]:
         """Score one round: at most one ready window per stream.
 
+        Transactional: the round either completes — windows scored, rings
+        advanced, tracker updated — or, if the forward raises, leaves every
+        ring and the tracker exactly as they were (windows are *peeked* and
+        only committed after scoring).  A supervisor that catches the raise
+        can simply call ``step()`` again: the same windows are re-scored and
+        the per-stream window indices never desync.
+
         Returns the per-window scores of this round (empty when no stream
         had a complete window buffered).
         """
         ids: list[int] = []
         wins: list[np.ndarray] = []
         for s, ring in enumerate(self._rings):
-            w = ring.pop_window()
+            w = ring.peek_window()
             if w is not None:
                 ids.append(s)
                 wins.append(w)
@@ -378,12 +419,16 @@ class MonitorEngine:
             rows = stacked  # raw windows; the front-end runs in-graph
         else:
             rows = features.batch_features(stacked, self.feature_kind)
-        p_uav = self._forward(rows)[:, 1]
+        p_uav = self._forward(rows)[:, 1]  # may raise: nothing committed yet
         full = np.zeros(self.n_streams, np.float64)
         mask = np.zeros(self.n_streams, bool)
         full[ids] = p_uav  # exact float32 -> float64 widening
         mask[ids] = True
         state = self.tracker.update(full, mask)
+        # Commit: consume the scored windows only now that the forward and
+        # the tracker round both succeeded.
+        for s in ids:
+            self._rings[s].advance()
         self.windows_scored += len(ids)
         return [
             WindowScore(

@@ -90,8 +90,99 @@ def test_ring_giant_push_keeps_tail():
 
 def test_engine_rejects_mismatched_feature_dim():
     cfg, params = _small_detector()
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match="feature dim"):
         MonitorEngine(params, cfg, n_streams=1, feature_kind="mfcc20")
+
+
+def test_ring_and_engine_validate_with_real_exceptions():
+    """Constructor validation raises ValueError, not assert — asserts vanish
+    under ``python -O`` and the always-on monitor must keep its guardrails."""
+    for bad in (dict(window=0, hop=1), dict(window=4, hop=0),
+                dict(window=4, hop=2, capacity_windows=0)):
+        with pytest.raises(ValueError):
+            StreamRing(**bad)
+    cfg, params = _small_detector()
+    with pytest.raises(ValueError, match="n_streams"):
+        MonitorEngine(params, cfg, n_streams=0, feature_kind="zcr")
+    with pytest.raises(ValueError, match="batch_slots"):
+        MonitorEngine(params, cfg, n_streams=1, feature_kind="zcr", batch_slots=0)
+
+
+def test_engine_push_rejects_bad_stream_index():
+    cfg, params = _small_detector()
+    engine = MonitorEngine(params, cfg, n_streams=2, feature_kind="zcr")
+    for bad in (-1, 2, 7):
+        with pytest.raises(ValueError, match="out of range"):
+            engine.push(bad, np.zeros(4, np.float32))
+
+
+def test_ring_peek_then_advance_equals_pop():
+    r = StreamRing(window=10, hop=5, capacity_windows=4)
+    r.push(np.arange(20))
+    np.testing.assert_array_equal(r.peek_window(), np.arange(10))
+    np.testing.assert_array_equal(r.peek_window(), np.arange(10))  # no consume
+    r.advance()
+    np.testing.assert_array_equal(r.pop_window(), np.arange(5, 15))
+    np.testing.assert_array_equal(r.peek_window(), np.arange(10, 20))
+    r.advance()
+    assert r.peek_window() is None
+    with pytest.raises(ValueError, match="advance"):
+        r.advance()
+
+
+def test_step_requeues_on_forward_error():
+    """The window-loss/desync regression: a forward that raises mid-round
+    must leave rings and tracker untouched, and a retry must produce events
+    bitwise identical to a never-faulted run."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(21)
+    n_streams, n_win = 3, 5
+    audio = rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+
+    def run(fail_rounds):
+        engine = MonitorEngine(
+            params, cfg, n_streams=n_streams, feature_kind="zcr",
+            batch_slots=2, **TRACK_KW,
+        )
+        real_forward = engine._forward
+        calls = {"n": 0}
+
+        def flaky(rows):
+            calls["n"] += 1
+            if calls["n"] in fail_rounds:
+                raise RuntimeError("injected forward crash")
+            return real_forward(rows)
+
+        engine._forward = flaky
+        for s in range(n_streams):
+            engine.push(s, audio[s])
+        scores: dict[int, list[float]] = {s: [] for s in range(n_streams)}
+        done = 0
+        while done < n_streams * n_win:
+            heads = [r._r for r in engine._rings]
+            ema = engine.tracker._ema.copy()
+            idx = engine.tracker._idx.copy()
+            try:
+                scored = engine.step()
+            except RuntimeError:
+                # nothing consumed: ring read heads and tracker state unmoved
+                assert [r._r for r in engine._rings] == heads
+                np.testing.assert_array_equal(engine.tracker._ema, ema)
+                np.testing.assert_array_equal(engine.tracker._idx, idx)
+                continue
+            for ws in scored:
+                scores[ws.stream].append(ws.p_uav)
+            done += len(scored)
+        return scores, engine.finalize()
+
+    clean_scores, clean_events = run(fail_rounds=())
+    faulty_scores, faulty_events = run(fail_rounds={1, 3, 4})
+    assert faulty_scores == clean_scores
+    assert faulty_events == clean_events
+    # per-stream window indices never desynced: n_win windows each
+    assert all(len(v) == n_win for v in faulty_scores.values())
 
 
 def test_streaming_parity_bitwise_probs_and_events():

@@ -28,6 +28,23 @@ def chunk_sizes(max_chunk=64, max_chunks=24):
     )
 
 
+def pathological_chunk_sizes(window_hi=12, max_chunks=12):
+    """Delivery schedules biased to the pathological edges: empty chunks and
+    chunks far larger than the whole ring buffer (capacity is at most
+    ``window_hi * capacity_windows`` below), interleaved with normal ones."""
+    return st.lists(
+        st.sampled_from([0, 0, 1, 7, 31, 5 * window_hi, 40 * window_hi]),
+        min_size=1,
+        max_size=max_chunks,
+    )
+
+
+def nonfinite_kinds():
+    return st.lists(
+        st.sampled_from(["nan", "+inf", "-inf", "finite"]), min_size=1, max_size=8
+    )
+
+
 def small_int(lo, hi):
     return st.floats(float(lo), float(hi)).map(int)
 
@@ -97,3 +114,67 @@ class TestStreamRingProperties:
         # still buffered (and too short to form another window)
         assert delivered == ring.dropped + pops * hop + ring.buffered
         assert ring.buffered < window
+
+    @settings(max_examples=40, deadline=None)
+    @given(pathological_chunk_sizes(), small_int(1, 12), small_int(1, 12))
+    def test_pathological_chunks_keep_invariants(self, chunks, window, hop):
+        """Empty chunks and chunks larger than the entire buffer: the ring
+        must stay hop-aligned, never yield a partial window, and conserve
+        samples — the giant chunk's surviving tail is a contiguous
+        hop-aligned slice of the delivered stream."""
+        hop = min(hop, window)
+        ring = StreamRing(window, hop, capacity_windows=2)
+        delivered = 0
+        pops = 0
+        for n in chunks:
+            dropped = ring.push(_labelled(n, delivered))
+            assert dropped % hop == 0  # drops are whole hops, empty push drops 0
+            delivered += n
+            while (w := ring.pop_window()) is not None:
+                pops += 1
+                start = int(w[0])
+                np.testing.assert_array_equal(w, _labelled(window, start))
+                assert start % hop == 0
+        assert delivered == ring.dropped + pops * hop + ring.buffered
+        assert ring.buffered < window
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.lists(nonfinite_kinds(), min_size=1, max_size=10),
+        small_int(2, 10),
+        small_int(1, 10),
+    )
+    def test_nonfinite_samples_pass_through_aligned(self, chunk_kinds, window, hop):
+        """The ring is a dumb byte mover: NaN/Inf samples ride through with
+        position and count intact (sanitisation is the engine's job, see
+        SanitizePolicy) — non-finite payloads must never corrupt alignment
+        or the conservation accounting."""
+        hop = min(hop, window)
+        ring = StreamRing(window, hop, capacity_windows=3)
+        delivered = []  # ground-truth stream, possibly non-finite
+        pops = 0
+        for kinds in chunk_kinds:
+            chunk = np.empty(len(kinds), np.float32)
+            for i, kind in enumerate(kinds):
+                base = float(len(delivered) + i)
+                chunk[i] = {
+                    "nan": np.nan, "+inf": np.inf, "-inf": -np.inf,
+                    "finite": base,
+                }[kind]
+            ring.push(chunk)
+            delivered.extend(chunk.tolist())
+            while True:
+                # _r is the absolute stream index of the next window's first
+                # sample, so it addresses the ground-truth stream directly.
+                start = ring._r
+                w = ring.pop_window()
+                if w is None:
+                    break
+                pops += 1
+                assert w.shape == (window,) and start % hop == 0
+                expect = np.asarray(
+                    delivered[start : start + window], np.float32
+                )
+                np.testing.assert_array_equal(w, expect)  # NaN-positional
+        stream = np.asarray(delivered, np.float32)
+        assert len(stream) == ring.dropped + pops * hop + ring.buffered
