@@ -146,6 +146,114 @@ class StreamRing:
             self._r += self.hop
         return out
 
+    # -- crash-recoverable state ---------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Deep-copied snapshot: buffer contents plus the absolute read/write
+        heads and the drop counter.  Restoring it reproduces the ring
+        bitwise — every window popped after a restore is identical to the
+        windows an uninterrupted ring would have popped."""
+        return {
+            "window": self.window,
+            "hop": self.hop,
+            "capacity": self.capacity,
+            "buf": self._buf.copy(),
+            "w": self._w,
+            "r": self._r,
+            "dropped": self.dropped,
+        }
+
+    def load_state_dict(self, sd: dict):
+        for field in ("window", "hop", "capacity"):
+            if sd[field] != getattr(self, field):
+                raise ValueError(
+                    f"state_dict {field}={sd[field]} does not match this "
+                    f"ring's {field}={getattr(self, field)}"
+                )
+        self._buf = np.asarray(sd["buf"], np.float32).copy()
+        self._w = int(sd["w"])
+        self._r = int(sd["r"])
+        self.dropped = int(sd["dropped"])
+
+
+@dataclasses.dataclass(frozen=True)
+class SanitizeReport:
+    """What :meth:`SanitizePolicy.apply` did to one chunk."""
+
+    rejected: bool = False  # chunk refused outright (reason below)
+    reason: str | None = None  # "nonfinite" | "clipped" when rejected
+    zeroed: int = 0  # non-finite samples replaced with 0.0
+    clipped: bool = False  # chunk exceeded the clip-fraction threshold
+
+
+@dataclasses.dataclass(frozen=True)
+class SanitizePolicy:
+    """Ingest hardening for one microphone chunk (the engine's ``push``).
+
+    A field microphone that starts emitting NaN/Inf (broken ADC, saturated
+    preamp, truncated UDP payload decoded as garbage) must degrade *its own*
+    stream, never poison the fleet: a single NaN entering the ring would
+    propagate through the forward into the tracker EMA, which never recovers
+    (``0.4 * nan + 0.6 * ema`` is NaN forever).  The policy runs before any
+    sample reaches the ring:
+
+    * ``nonfinite="reject"`` drops a chunk containing any NaN/Inf sample;
+      ``"zero"`` replaces just the poisoned samples with 0.0 and keeps the
+      chunk (preserves window alignment at the cost of a dirty window).
+    * ``clip_level``/``max_clip_fraction`` flag *clipped* chunks — more than
+      ``max_clip_fraction`` of samples at or beyond ``clip_level`` full
+      scale.  ``clipped_action="count"`` only counts them (clipping degrades
+      features but is finite); ``"reject"`` drops the chunk.
+
+    Per-stream reject/zero/clip counters live on the engine
+    (``rejected_chunks``/``zeroed_samples``/``clipped_chunks``) so an
+    operator can tell *which* microphone went bad and when.
+    """
+
+    nonfinite: str = "reject"  # "reject" | "zero"
+    clip_level: float | None = None  # None disables clip detection
+    max_clip_fraction: float = 0.05
+    clipped_action: str = "count"  # "count" | "reject"
+
+    def __post_init__(self):
+        if self.nonfinite not in ("reject", "zero"):
+            raise ValueError(
+                f"nonfinite must be 'reject' or 'zero', got {self.nonfinite!r}"
+            )
+        if self.clipped_action not in ("count", "reject"):
+            raise ValueError(
+                f"clipped_action must be 'count' or 'reject', got "
+                f"{self.clipped_action!r}"
+            )
+        if self.clip_level is not None and self.clip_level <= 0:
+            raise ValueError(f"clip_level must be positive, got {self.clip_level}")
+        if not 0.0 <= self.max_clip_fraction <= 1.0:
+            raise ValueError(
+                f"max_clip_fraction must be in [0, 1], got "
+                f"{self.max_clip_fraction}"
+            )
+
+    def apply(self, x: np.ndarray) -> tuple[np.ndarray | None, SanitizeReport]:
+        """Sanitize one chunk; returns ``(clean_chunk_or_None, report)``.
+        The chunk is ``None`` exactly when the report says ``rejected``."""
+        bad = ~np.isfinite(x)
+        n_bad = int(bad.sum())
+        if n_bad and self.nonfinite == "reject":
+            return None, SanitizeReport(rejected=True, reason="nonfinite")
+        clipped = False
+        if self.clip_level is not None and len(x):
+            finite_frac = float(
+                np.mean(np.abs(np.where(bad, 0.0, x)) >= self.clip_level)
+            )
+            clipped = finite_frac > self.max_clip_fraction
+            if clipped and self.clipped_action == "reject":
+                return None, SanitizeReport(
+                    rejected=True, reason="clipped", clipped=True
+                )
+        if n_bad:
+            x = np.where(bad, np.float32(0.0), x)
+        return x, SanitizeReport(zeroed=n_bad, clipped=clipped)
+
 
 @dataclasses.dataclass
 class WindowScore:
@@ -199,6 +307,7 @@ class MonitorEngine:
         precision: str = "int8",
         prune=None,  # PruneSpec baked into the served artifact
         policy=None,  # PrecisionPolicy resolving per-layer modes
+        sanitize: SanitizePolicy | None = None,
         capacity_windows: int = 8,
         interpret: bool | None = None,
         shards: int | None = None,
@@ -309,10 +418,24 @@ class MonitorEngine:
             (self._inflight + 1, batch_slots, self._in_width), np.float32
         )
         self._block_i = 0
+        # Ingest hardening: the sanitize policy runs on every push, per-
+        # stream counters record what it did (None = trust the transport).
+        self.sanitize = sanitize
+        self.rejected_chunks = np.zeros(n_streams, np.int64)
+        self.zeroed_samples = np.zeros(n_streams, np.int64)
+        self.clipped_chunks = np.zeros(n_streams, np.int64)
+        # Fault-injection seam: when set, called as ``fault_hook(ids)`` at
+        # the top of each scoring round, before any state is committed — it
+        # may raise (simulated crash) or advance a fake clock (simulated
+        # stall).  The transactional step() guarantees a raising hook leaves
+        # rings and tracker untouched.  Installed by the fleet supervisor's
+        # fault harness; never set in production serving.
+        self.fault_hook = None
         # observability counters for the bench / driver
         self.windows_scored = 0
         self.forward_calls = 0
         self.padded_slots = 0
+        self.rounds = 0  # successfully committed scoring rounds
         self._dropped_samples = 0  # maintained incrementally by push()
 
     # -- ingest --------------------------------------------------------------
@@ -324,7 +447,16 @@ class MonitorEngine:
                 f"stream index {stream} out of range for an engine with "
                 f"{self.n_streams} stream(s) (valid: 0..{self.n_streams - 1})"
             )
-        dropped = self._rings[stream].push(samples)
+        x = np.asarray(samples, np.float32).reshape(-1)
+        if self.sanitize is not None:
+            x, rep = self.sanitize.apply(x)
+            self.zeroed_samples[stream] += rep.zeroed
+            if rep.clipped:
+                self.clipped_chunks[stream] += 1
+            if rep.rejected:
+                self.rejected_chunks[stream] += 1
+                return 0  # nothing reached the ring, nothing overflowed
+        dropped = self._rings[stream].push(x)
         self._dropped_samples += dropped
         return dropped
 
@@ -414,6 +546,10 @@ class MonitorEngine:
                 wins.append(w)
         if not ids:
             return []
+        if self.fault_hook is not None:
+            # injection seam (supervisor chaos harness): may raise or stall;
+            # nothing has been committed yet either way
+            self.fault_hook(ids)
         stacked = np.stack(wins)
         if self.on_device_features:
             rows = stacked  # raw windows; the front-end runs in-graph
@@ -430,6 +566,7 @@ class MonitorEngine:
         for s in ids:
             self._rings[s].advance()
         self.windows_scored += len(ids)
+        self.rounds += 1
         return [
             WindowScore(
                 stream=s,
@@ -453,3 +590,53 @@ class MonitorEngine:
     def finalize(self) -> list[list[TrackEvent]]:
         """Flush still-open tracks; returns per-stream event lists."""
         return self.tracker.finalize()
+
+    # -- crash recovery ------------------------------------------------------
+
+    def snapshot(self) -> dict:
+        """Deep-copied snapshot of all serving state: every ring's buffer and
+        read/write heads, the tracker's per-stream arrays and emitted events,
+        and the observability counters.
+
+        The contract (pinned by the fault-tolerance conformance tests): a
+        fresh engine built from the *same baked artifact* that ``restore``s
+        this snapshot and then receives the same pushes produces window
+        scores and ``TrackEvent`` lists bitwise identical to the engine that
+        never died.  Weights are deliberately NOT part of the snapshot — the
+        artifact is immutable and shared, so a supervisor rebuilds workers
+        from it and restores only the cheap mutable state."""
+        return {
+            "rings": [r.state_dict() for r in self._rings],
+            "tracker": self.tracker.state_dict(),
+            "counters": {
+                "windows_scored": self.windows_scored,
+                "forward_calls": self.forward_calls,
+                "padded_slots": self.padded_slots,
+                "rounds": self.rounds,
+                "dropped_samples": self._dropped_samples,
+                "rejected_chunks": self.rejected_chunks.copy(),
+                "zeroed_samples": self.zeroed_samples.copy(),
+                "clipped_chunks": self.clipped_chunks.copy(),
+            },
+        }
+
+    def restore(self, snap: dict):
+        """Load a :meth:`snapshot` into this engine (same ``n_streams`` and
+        window/hop geometry required)."""
+        if len(snap["rings"]) != self.n_streams:
+            raise ValueError(
+                f"snapshot holds {len(snap['rings'])} stream(s) but this "
+                f"engine was built for {self.n_streams}"
+            )
+        for ring, sd in zip(self._rings, snap["rings"]):
+            ring.load_state_dict(sd)
+        self.tracker.load_state_dict(snap["tracker"])
+        c = snap["counters"]
+        self.windows_scored = int(c["windows_scored"])
+        self.forward_calls = int(c["forward_calls"])
+        self.padded_slots = int(c["padded_slots"])
+        self.rounds = int(c["rounds"])
+        self._dropped_samples = int(c["dropped_samples"])
+        self.rejected_chunks = np.asarray(c["rejected_chunks"], np.int64).copy()
+        self.zeroed_samples = np.asarray(c["zeroed_samples"], np.int64).copy()
+        self.clipped_chunks = np.asarray(c["clipped_chunks"], np.int64).copy()

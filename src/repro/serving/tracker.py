@@ -229,6 +229,46 @@ class VectorTemporalTracker:
             self._close(open_, self._idx[open_])
         return self.events
 
+    # -- crash-recoverable state ---------------------------------------------
+
+    #: array fields captured by state_dict (events are handled separately)
+    _STATE_ARRAYS = (
+        "_ema", "_seen", "_active", "_onset", "_count", "_sum", "_peak", "_idx"
+    )
+
+    def state_dict(self) -> dict:
+        """Deep-copied snapshot of every per-stream array plus the emitted
+        events.  Feeding it back through :meth:`load_state_dict` — on this
+        instance or a freshly built one — reproduces the tracker *exactly*:
+        replaying the same probability sequence afterwards yields bitwise
+        identical EMA trajectories and ``TrackEvent`` lists (the
+        crash-recovery conformance tests pin this)."""
+        sd = {name: getattr(self, name).copy() for name in self._STATE_ARRAYS}
+        # TrackEvent instances are never mutated after emission, so copying
+        # the per-stream lists (not the events) is a full deep copy.
+        sd["events"] = [list(evs) for evs in self.events]
+        return sd
+
+    def load_state_dict(self, sd: dict):
+        """Restore a :meth:`state_dict` snapshot; the tracker must have been
+        built with the same ``n_streams``."""
+        n = len(sd["_ema"])
+        if n != self.n_streams:
+            raise ValueError(
+                f"state_dict holds {n} stream(s) but this tracker was built "
+                f"for {self.n_streams}"
+            )
+        for name in self._STATE_ARRAYS:
+            cur = getattr(self, name)
+            arr = np.asarray(sd[name], cur.dtype)
+            if arr.shape != cur.shape:
+                raise ValueError(
+                    f"state_dict field {name} has shape {arr.shape}, "
+                    f"expected {cur.shape}"
+                )
+            setattr(self, name, arr.copy())
+        self.events = [list(evs) for evs in sd["events"]]
+
 
 def track_stream(probs: Iterable[float], **kw) -> list[TrackEvent]:
     tr = TemporalTracker(**kw)

@@ -1,0 +1,299 @@
+"""Fault-tolerance conformance: crash-recoverable engine state, ingest
+hardening, and (from the supervisor sections onward) the chaos suite over
+the fleet supervisor's deterministic fault-injection harness.
+
+The central contract everywhere in this file is *bitwise*, not approximate:
+
+* kill an engine mid-scene, restore its snapshot into a fresh engine built
+  from the same baked artifact, finish the scene — the window scores and
+  ``TrackEvent`` lists equal the uninterrupted run exactly;
+* inject faults into some streams/workers — every stream not directly hit
+  by a data-destroying fault produces event lists identical to the
+  fault-free run (per-sample activation scales make rows co-batch
+  independent; snapshot/restore and transactional rounds make worker death
+  lossless).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import features
+from repro.models import cnn1d
+from repro.serving.engine import MonitorEngine, SanitizePolicy, StreamRing
+from repro.serving.quantized_params import quantize_params
+
+TRACK_KW = dict(ema_alpha=0.7, enter_threshold=0.02, exit_threshold=0.01,
+                min_duration=1)
+
+
+@pytest.fixture(scope="module")
+def detector():
+    cfg = cnn1d.CNNConfig(
+        input_len=features.FEATURE_DIMS["zcr"], channels=(4, 8), hidden=8
+    )
+    params = cnn1d.init_params(jax.random.PRNGKey(0), cfg)
+    # Bake once: every engine/worker in this module serves the same frozen
+    # artifact, exactly like a supervisor rebuilding dead workers.
+    qp = quantize_params(params, cfg, mode="int8")
+    return cfg, qp
+
+
+def _scene_audio(rng, n_streams, n_win):
+    return rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+
+
+def _delivery_schedule(rng, audio):
+    """Uneven real-world-ish chunk boundaries, precomputed so interrupted
+    and uninterrupted runs replay the identical delivery."""
+    n_streams, total = audio.shape
+    schedule = []  # list of rounds; each round: [(stream, lo, hi), ...]
+    cursors = [0] * n_streams
+    while any(c < total for c in cursors):
+        rnd = []
+        for s in range(n_streams):
+            if cursors[s] >= total:
+                continue
+            n = int(rng.uniform(0.3, 1.7) * features.N_SAMPLES)
+            rnd.append((s, cursors[s], min(total, cursors[s] + n)))
+            cursors[s] += n
+        schedule.append(rnd)
+    return schedule
+
+
+def _drive(engine, audio, schedule, *, start_round=0, scores=None):
+    """Deliver schedule[start_round:], stepping once per delivery round and
+    draining at the end; collects per-stream p_uav lists."""
+    scores = {s: [] for s in range(audio.shape[0])} if scores is None else scores
+    for rnd in schedule[start_round:]:
+        for s, lo, hi in rnd:
+            engine.push(s, audio[s, lo:hi])
+        for ws in engine.step():
+            scores[ws.stream].append(ws.p_uav)
+    while True:
+        scored = engine.step()
+        if not scored:
+            break
+        for ws in scored:
+            scores[ws.stream].append(ws.p_uav)
+    return scores
+
+
+# ---------------------------------------------------------------------------
+# Engine snapshot / restore (crash-recoverable state)
+# ---------------------------------------------------------------------------
+
+
+def test_engine_kill_restore_bitwise_equal_to_uninterrupted(detector):
+    """The acceptance-criteria conformance test: kill an engine mid-scene,
+    restore its snapshot into a fresh engine built from the same baked
+    artifact, finish the scene — scores and events bitwise equal the run
+    that was never interrupted."""
+    cfg, qp = detector
+    rng = np.random.default_rng(7)
+    n_streams, n_win = 3, 6
+    audio = _scene_audio(rng, n_streams, n_win)
+    schedule = _delivery_schedule(rng, audio)
+    kill_at = len(schedule) // 2
+    assert 0 < kill_at < len(schedule)
+
+    def fresh():
+        return MonitorEngine(
+            qp, cfg, n_streams=n_streams, feature_kind="zcr",
+            batch_slots=2, **TRACK_KW,
+        )
+
+    ref_engine = fresh()
+    ref_scores = _drive(ref_engine, audio, schedule)
+    ref_events = ref_engine.finalize()
+    assert sum(len(v) for v in ref_scores.values()) == n_streams * n_win
+    assert sum(len(e) for e in ref_events) > 0
+
+    # interrupted leg: run the first half, snapshot, "kill" the engine, and
+    # revive the snapshot in a brand-new engine
+    first = fresh()
+    scores = _drive(first, audio, schedule[:kill_at])
+    snap = first.snapshot()
+    del first  # the crash
+
+    revived = fresh()
+    revived.restore(snap)
+    scores = _drive(revived, audio, schedule, start_round=kill_at, scores=scores)
+    events = revived.finalize()
+
+    for s in range(n_streams):
+        np.testing.assert_array_equal(
+            np.asarray(scores[s], np.float64), np.asarray(ref_scores[s], np.float64)
+        )
+        assert events[s] == ref_events[s]
+    # counters survive the crash too
+    assert revived.windows_scored == ref_engine.windows_scored
+    assert revived.dropped_samples == ref_engine.dropped_samples
+
+
+def test_engine_snapshot_is_isolated_from_live_engine(detector):
+    """Snapshot then keep running: later rounds must not mutate the snapshot
+    (a supervisor holds last-good snapshots across many rounds)."""
+    cfg, qp = detector
+    rng = np.random.default_rng(8)
+    engine = MonitorEngine(qp, cfg, n_streams=2, feature_kind="zcr", **TRACK_KW)
+    audio = _scene_audio(rng, 2, 3)
+    for s in range(2):
+        engine.push(s, audio[s, : features.N_SAMPLES])
+    engine.step()
+    snap = engine.snapshot()
+    ring_r = [sd["r"] for sd in snap["rings"]]
+    ema = snap["tracker"]["_ema"].copy()
+    for s in range(2):
+        engine.push(s, audio[s, features.N_SAMPLES:])
+    engine.drain()
+    assert [sd["r"] for sd in snap["rings"]] == ring_r
+    np.testing.assert_array_equal(snap["tracker"]["_ema"], ema)
+
+
+def test_engine_restore_validates_stream_count(detector):
+    cfg, qp = detector
+    e3 = MonitorEngine(qp, cfg, n_streams=3, feature_kind="zcr")
+    e2 = MonitorEngine(qp, cfg, n_streams=2, feature_kind="zcr")
+    with pytest.raises(ValueError, match="3 stream"):
+        e2.restore(e3.snapshot())
+
+
+def test_ring_state_dict_validates_geometry():
+    sd = StreamRing(window=10, hop=5, capacity_windows=2).state_dict()
+    with pytest.raises(ValueError, match="hop"):
+        StreamRing(window=10, hop=10, capacity_windows=2).load_state_dict(sd)
+
+
+# ---------------------------------------------------------------------------
+# Ingest hardening (SanitizePolicy)
+# ---------------------------------------------------------------------------
+
+
+def test_sanitize_reject_blocks_nan_poison_and_isolates_streams(detector):
+    """A NaN-emitting microphone on stream 0: with the reject policy its
+    chunks are refused (counted per stream), its tracker EMA stays finite,
+    and stream 1 — fed the identical audio as a clean reference run — stays
+    bitwise identical."""
+    cfg, qp = detector
+    rng = np.random.default_rng(9)
+    n_win = 4
+    clean = _scene_audio(rng, 2, n_win)
+
+    ref = MonitorEngine(qp, cfg, n_streams=2, feature_kind="zcr", **TRACK_KW)
+    for s in range(2):
+        ref.push(s, clean[s])
+    ref_scores = {s: [] for s in range(2)}
+    for ws in ref.drain():
+        ref_scores[ws.stream].append(ws.p_uav)
+    ref_events = ref.finalize()
+
+    engine = MonitorEngine(
+        qp, cfg, n_streams=2, feature_kind="zcr",
+        sanitize=SanitizePolicy(nonfinite="reject"), **TRACK_KW,
+    )
+    poisoned = clean[0].copy()
+    poisoned[::50] = np.nan
+    engine.push(0, poisoned)  # rejected whole
+    engine.push(0, np.full(100, np.inf, np.float32))  # rejected too
+    engine.push(1, clean[1])
+    scores = {s: [] for s in range(2)}
+    for ws in engine.drain():
+        scores[ws.stream].append(ws.p_uav)
+    events = engine.finalize()
+
+    assert engine.rejected_chunks.tolist() == [2, 0]
+    assert scores[0] == []  # nothing reached stream 0's ring
+    assert np.isfinite(engine.tracker.smoothed).all()
+    np.testing.assert_array_equal(
+        np.asarray(scores[1], np.float64), np.asarray(ref_scores[1], np.float64)
+    )
+    assert events[1] == ref_events[1]
+
+
+def test_sanitize_zero_mode_keeps_alignment(detector):
+    """zero mode: poisoned samples are zeroed in place, chunk length (and so
+    window alignment) is preserved, and the per-stream zeroed counter says
+    exactly how many samples were scrubbed."""
+    cfg, qp = detector
+    engine = MonitorEngine(
+        qp, cfg, n_streams=1, feature_kind="zcr",
+        sanitize=SanitizePolicy(nonfinite="zero"),
+    )
+    chunk = np.ones(features.N_SAMPLES, np.float32)
+    chunk[:7] = np.nan
+    chunk[10:13] = -np.inf
+    engine.push(0, chunk)
+    assert engine.zeroed_samples.tolist() == [10]
+    assert engine.rejected_chunks.tolist() == [0]
+    ring = engine._rings[0]
+    assert ring.buffered == features.N_SAMPLES  # full chunk kept
+    w = ring.peek_window()
+    assert np.isfinite(w).all()
+    np.testing.assert_array_equal(w[:7], np.zeros(7))
+    np.testing.assert_array_equal(w[13:], np.ones(features.N_SAMPLES - 13))
+
+
+def test_sanitize_clip_detection_counts_and_rejects():
+    policy_count = SanitizePolicy(clip_level=1.0, max_clip_fraction=0.1)
+    loud = np.ones(100, np.float32)  # 100% at full scale
+    soft = np.full(100, 0.5, np.float32)
+    kept, rep = policy_count.apply(loud)
+    assert rep.clipped and not rep.rejected and kept is not None
+    kept, rep = policy_count.apply(soft)
+    assert not rep.clipped and kept is not None
+
+    policy_reject = SanitizePolicy(
+        clip_level=1.0, max_clip_fraction=0.1, clipped_action="reject"
+    )
+    kept, rep = policy_reject.apply(loud)
+    assert rep.rejected and rep.reason == "clipped" and kept is None
+
+
+def test_sanitize_policy_validates_knobs():
+    for bad in (
+        dict(nonfinite="drop"),
+        dict(clipped_action="zero"),
+        dict(clip_level=0.0),
+        dict(max_clip_fraction=1.5),
+    ):
+        with pytest.raises(ValueError):
+            SanitizePolicy(**bad)
+
+
+def test_without_sanitize_nan_poisons_only_its_own_stream():
+    """The hazard the policy exists for, and the blast-radius guarantee that
+    bounds it: with no sanitize policy a NaN chunk does poison its stream's
+    EMA forever — but per-sample activation scales keep every co-batched
+    clean stream bitwise intact.  (psd features: a NaN sample propagates
+    through the FFT into the whole feature row — unlike zcr, whose
+    sign-comparison math silently launders NaN into zeros.)"""
+    cfg = cnn1d.CNNConfig(
+        input_len=features.FEATURE_DIMS["psd"], channels=(4, 8), hidden=8
+    )
+    params = cnn1d.init_params(jax.random.PRNGKey(3), cfg)
+    qp = quantize_params(params, cfg, mode="int8")
+    rng = np.random.default_rng(10)
+    clean = _scene_audio(rng, 2, 2)
+
+    ref = MonitorEngine(qp, cfg, n_streams=2, feature_kind="psd", **TRACK_KW)
+    for s in range(2):
+        ref.push(s, clean[s])
+    ref_scores = {s: [] for s in range(2)}
+    for ws in ref.drain():
+        ref_scores[ws.stream].append(ws.p_uav)
+
+    engine = MonitorEngine(qp, cfg, n_streams=2, feature_kind="psd", **TRACK_KW)
+    poisoned = clean[0].copy()
+    poisoned[1000] = np.nan
+    engine.push(0, poisoned)
+    engine.push(1, clean[1])
+    scores = {s: [] for s in range(2)}
+    for ws in engine.drain():
+        scores[ws.stream].append(ws.p_uav)
+
+    assert np.isnan(engine.tracker.smoothed[0])  # the un-hardened hazard
+    np.testing.assert_array_equal(  # the blast radius: one row, one stream
+        np.asarray(scores[1], np.float64), np.asarray(ref_scores[1], np.float64)
+    )

@@ -185,3 +185,68 @@ def test_vector_events_invariant_to_dispatch_order():
         events = vec.finalize()
         for s in range(n):
             assert events[s] == ref[s], schedule.__name__
+
+
+# ---------------------------------------------------------------------------
+# Crash-recoverable state (state_dict / load_state_dict)
+# ---------------------------------------------------------------------------
+
+
+def test_state_dict_restore_replays_bitwise():
+    """Snapshot mid-sequence, load into a FRESH tracker, replay the tail:
+    EMA trajectory and events must be bitwise identical to the tracker that
+    never died — the crash-recovery contract."""
+    rng = np.random.default_rng(31)
+    n, steps, cut = 4, 300, 117
+    p = rng.random((steps, n))
+    masks = rng.random((steps, n)) < 0.7
+    kw = dict(ema_alpha=0.4, enter_threshold=0.55, exit_threshold=0.45, min_duration=2)
+
+    ref = VectorTemporalTracker(n, **kw)
+    for t in range(steps):
+        ref.update(p[t], masks[t])
+    ref_events = ref.finalize()
+    assert sum(len(e) for e in ref_events) > 0
+
+    first = VectorTemporalTracker(n, **kw)
+    for t in range(cut):
+        first.update(p[t], masks[t])
+    snap = first.state_dict()
+
+    revived = VectorTemporalTracker(n, **kw)
+    revived.load_state_dict(snap)
+    states = []
+    for t in range(cut, steps):
+        states.append(revived.update(p[t], masks[t]))
+    assert revived.finalize() == ref_events
+
+    # the revived trajectory is the uninterrupted one, bitwise
+    ref2 = VectorTemporalTracker(n, **kw)
+    for t in range(steps):
+        st2 = ref2.update(p[t], masks[t])
+        if t >= cut:
+            got = states[t - cut]
+            np.testing.assert_array_equal(got["smoothed"], st2["smoothed"])
+            np.testing.assert_array_equal(got["idx"], st2["idx"])
+            np.testing.assert_array_equal(got["active"], st2["active"])
+
+
+def test_state_dict_is_deep_copied():
+    """Mutating the tracker after snapshot must not leak into the snapshot,
+    and vice versa — a supervisor keeps snapshots across later rounds."""
+    vec = VectorTemporalTracker(2, ema_alpha=1.0, enter_threshold=0.5,
+                                exit_threshold=0.2, min_duration=1)
+    vec.update(np.array([0.9, 0.1]))
+    snap = vec.state_dict()
+    n_events_then = len(snap["events"][0])
+    vec.update(np.array([0.1, 0.1]))  # closes stream 0's event
+    vec.finalize()
+    assert len(snap["events"][0]) == n_events_then  # snapshot unchanged
+    snap["_ema"][0] = 123.0
+    assert vec._ema[0] != 123.0
+
+
+def test_load_state_dict_validates_stream_count():
+    sd = VectorTemporalTracker(3).state_dict()
+    with pytest.raises(ValueError, match="3 stream"):
+        VectorTemporalTracker(2).load_state_dict(sd)
