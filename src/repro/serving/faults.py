@@ -1,0 +1,214 @@
+"""Deterministic fault injection for the fleet supervisor's chaos suite.
+
+A :class:`FaultPlan` is a seeded, JSON-serialisable list of :class:`Fault`
+records, each pinned to an ingest round and a target (a global stream for
+chunk faults, a worker index for worker faults).  The supervisor consults
+the plan at exactly two seams — ``push()`` for chunk faults, the engine's
+``fault_hook`` for worker faults — so a plan replays *identically* on every
+run: same seed, same faults, same rounds, same blast radius.  That
+determinism is what lets the chaos tests assert bitwise equality of the
+unaffected streams instead of "mostly worked".
+
+Fault kinds and their contracts:
+
+``drop_chunk``
+    The chunk never reaches the worker (lossy transport).  Only the target
+    stream's windows shift; every other stream is bitwise unaffected.
+``corrupt_chunk``
+    The chunk's payload is deterministically poisoned with NaN before
+    delivery (truncated packet decoded as garbage).  With a reject
+    sanitize policy the worker refuses it — same blast radius as a drop.
+``jitter_chunk``
+    The chunk is split and delivered as two back-to-back pushes
+    (re-segmented transport).  Content-preserving: *no* stream's output
+    may change, not even the target's.
+``raise_forward``
+    The worker's forward raises mid-round (driver bug, device loss).
+    Lossless: the transactional round plus snapshot/restore recovery must
+    leave every stream bitwise identical to the fault-free run.
+``stall_forward``
+    The forward hangs past the dispatch deadline; the watchdog abandons it
+    (:class:`StalledForward`).  Detected via the supervisor's deadline
+    check on the injected clock.  Lossless, like ``raise_forward``.
+``kill_worker``
+    The worker process dies between rounds; its engine object is gone.
+    The supervisor rebuilds from the baked artifact + last-good snapshot +
+    journal.  Lossless.
+
+``python -m repro.serving.faults --seed 7 --streams 8 --workers 2
+--rounds 20 --out plan.json`` writes a plan for the ``launch/monitor
+--faults`` demo.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import numpy as np
+
+#: chunk faults target one global stream's ingest
+CHUNK_KINDS = ("drop_chunk", "jitter_chunk", "corrupt_chunk")
+#: worker faults target one worker's scoring round
+WORKER_KINDS = ("raise_forward", "stall_forward", "kill_worker")
+KINDS = CHUNK_KINDS + WORKER_KINDS
+
+#: kinds that destroy data on their target stream — everything else must be
+#: bitwise invisible in the output
+LOSSY_KINDS = ("drop_chunk", "corrupt_chunk")
+
+
+class InjectedFault(RuntimeError):
+    """Raised inside a worker round to simulate a crash."""
+
+
+class StalledForward(InjectedFault):
+    """A forward that hung past the dispatch deadline (watchdog fired)."""
+
+
+class FaultClock:
+    """Deterministic stand-in for ``time.monotonic`` so stall detection is
+    testable: each ``now()`` ticks a fixed amount, and a stalling fault
+    ``advance()``s it past the supervisor's dispatch deadline."""
+
+    def __init__(self, start: float = 0.0, tick: float = 1e-4):
+        self._t = float(start)
+        self._tick = float(tick)
+
+    def now(self) -> float:
+        self._t += self._tick  # time only moves forward
+        return self._t
+
+    def advance(self, dt: float):
+        self._t += float(dt)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injected fault, pinned to an ingest round and a target."""
+
+    kind: str
+    round: int
+    stream: int | None = None  # chunk faults: global stream id
+    worker: int | None = None  # worker faults: worker index
+    magnitude: float = 0.0  # jitter: split fraction; stall: hang seconds
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown fault kind {self.kind!r} (one of {KINDS})")
+        if self.round < 0:
+            raise ValueError(f"round must be >= 0, got {self.round}")
+        if self.kind in CHUNK_KINDS and self.stream is None:
+            raise ValueError(f"{self.kind} needs a target stream")
+        if self.kind in WORKER_KINDS and self.worker is None:
+            raise ValueError(f"{self.kind} needs a target worker")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """An ordered set of faults plus the seed that generated them."""
+
+    faults: list[Fault]
+    seed: int | None = None
+
+    def __post_init__(self):
+        self.faults = [
+            f if isinstance(f, Fault) else Fault(**f) for f in self.faults
+        ]
+        self._chunk: dict[tuple[int, int], Fault] = {}
+        self._worker: dict[tuple[int, int], list[Fault]] = {}
+        for f in self.faults:
+            if f.kind in CHUNK_KINDS:
+                # first fault wins on a (round, stream) collision
+                self._chunk.setdefault((f.round, f.stream), f)
+            else:
+                self._worker.setdefault((f.round, f.worker), []).append(f)
+
+    # -- lookups the supervisor uses ----------------------------------------
+
+    def chunk_fault(self, round_: int, stream: int) -> Fault | None:
+        return self._chunk.get((round_, stream))
+
+    def worker_faults(self, round_: int, worker: int) -> list[Fault]:
+        return self._worker.get((round_, worker), [])
+
+    @property
+    def affected_streams(self) -> set[int]:
+        """Streams hit by data-destroying faults; every stream NOT in this
+        set must be bitwise identical to the fault-free run."""
+        return {f.stream for f in self.faults if f.kind in LOSSY_KINDS}
+
+    # -- construction / serialisation ---------------------------------------
+
+    @classmethod
+    def generate(
+        cls,
+        seed: int,
+        *,
+        n_streams: int,
+        n_workers: int,
+        n_rounds: int,
+        n_faults: int = 6,
+        kinds: tuple[str, ...] = KINDS,
+    ) -> "FaultPlan":
+        """Seeded random plan: same arguments, same plan, every time."""
+        rng = np.random.default_rng(seed)
+        faults = []
+        for _ in range(n_faults):
+            kind = kinds[int(rng.integers(len(kinds)))]
+            rnd = int(rng.integers(n_rounds))
+            if kind in CHUNK_KINDS:
+                mag = float(rng.uniform(0.2, 0.8)) if kind == "jitter_chunk" else 0.0
+                faults.append(
+                    Fault(kind, rnd, stream=int(rng.integers(n_streams)),
+                          magnitude=mag)
+                )
+            else:
+                mag = float(rng.uniform(2.0, 10.0)) if kind == "stall_forward" else 0.0
+                faults.append(
+                    Fault(kind, rnd, worker=int(rng.integers(n_workers)),
+                          magnitude=mag)
+                )
+        faults.sort(key=lambda f: (f.round, KINDS.index(f.kind),
+                                   -1 if f.stream is None else f.stream,
+                                   -1 if f.worker is None else f.worker))
+        return cls(faults, seed=seed)
+
+    def to_json(self) -> str:
+        return json.dumps(
+            {"seed": self.seed,
+             "faults": [dataclasses.asdict(f) for f in self.faults]},
+            indent=2,
+        )
+
+    @classmethod
+    def from_json(cls, text: str) -> "FaultPlan":
+        d = json.loads(text)
+        return cls([Fault(**f) for f in d["faults"]], seed=d.get("seed"))
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="Write a seeded fault plan (JSON) for the chaos demo."
+    )
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--streams", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=2)
+    ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--faults", type=int, default=6)
+    ap.add_argument("--out", default="fault_plan.json")
+    args = ap.parse_args(argv)
+    plan = FaultPlan.generate(
+        args.seed, n_streams=args.streams, n_workers=args.workers,
+        n_rounds=args.rounds, n_faults=args.faults,
+    )
+    with open(args.out, "w") as fh:
+        fh.write(plan.to_json())
+    print(f"wrote {len(plan.faults)} fault(s) to {args.out}")
+    for f in plan.faults:
+        target = f"stream {f.stream}" if f.stream is not None else f"worker {f.worker}"
+        print(f"  round {f.round:3d}  {f.kind:14s}  {target}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,389 @@
+"""Fault-tolerant fleet supervisor over a pool of monitor engines.
+
+A field deployment runs for weeks: microphones emit garbage, a driver bug
+raises mid-forward, a dispatch hangs, a worker process dies.  The
+supervisor keeps the *fleet* alive through all of it while preserving the
+repo's central numeric contract — per-sample activation scales make every
+window's score independent of its co-batch, so recovery can be held to a
+bitwise standard, not a tolerance:
+
+* **worker pool** — global streams are partitioned into contiguous groups,
+  one :class:`~repro.serving.engine.MonitorEngine` per group, all built
+  from the *same immutable baked artifact* (weights are never part of any
+  recovery path, so rebuilding a worker is cheap and exact);
+* **health** — each worker carries a heartbeat (clock time of its last
+  successful round); a round that overruns ``dispatch_deadline_s`` on the
+  supervisor's clock is classified as a *stall* rather than a crash;
+* **crash recovery** — after every successful round a worker's state is
+  snapshotted (``last_good``) and its push journal cleared; on a crash,
+  stall, or kill the supervisor rebuilds the engine from the artifact,
+  ``restore``s ``last_good``, replays the journal (chunks pushed since the
+  snapshot), and re-runs the round.  The transactional
+  :meth:`~repro.serving.engine.MonitorEngine.step` guarantees the failed
+  attempt committed nothing, so the re-run scores the *same* windows —
+  recovery is lossless and bitwise;
+* **reassignment** — a worker that keeps dying (``rebuilds >
+  max_rebuilds``) is retired: its revived per-stream state (ring
+  snapshots, tracker arrays, events, counters) is spliced into a surviving
+  worker rebuilt for the combined stream set.  The migrated streams keep
+  their exact EMA trajectories and window indices, so even a permanently
+  dead worker costs zero samples and zero numeric drift.
+
+Fault injection (:mod:`repro.serving.faults`) enters through exactly two
+seams — chunk faults in :meth:`push`, worker faults via the engine's
+``fault_hook`` — and is ``None`` in production.  The chaos suite in
+``tests/test_fault_tolerance.py`` drives seeded plans through this class
+and asserts the fleet never crashes and unaffected streams are bitwise
+identical to a fault-free run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.models.cnn1d import CNNConfig
+from repro.serving.engine import MonitorEngine, WindowScore
+from repro.serving.faults import FaultPlan, InjectedFault, StalledForward
+from repro.serving.quantized_params import QuantizedParams
+from repro.serving.tracker import TrackEvent
+
+
+class _Worker:
+    """Bookkeeping for one engine in the pool (not part of the public API)."""
+
+    def __init__(self, idx: int, engine: MonitorEngine, streams: list[int]):
+        self.idx = idx
+        self.engine: MonitorEngine | None = engine
+        self.streams = list(streams)  # global ids; position = local stream id
+        self.last_good = engine.snapshot()  # state after the last good round
+        self.journal: list[tuple[int, np.ndarray]] = []  # pushes since then
+        self.rebuilds = 0
+        self.alive = True
+        self.last_heartbeat: float | None = None
+
+
+def _merge_snapshots(dst: dict, src: dict) -> dict:
+    """Splice ``src``'s per-stream state after ``dst``'s: the combined
+    snapshot restores into an engine built for the combined stream count.
+    Per-stream fields concatenate; whole-engine counters add."""
+    tracker = {
+        k: (dst["tracker"][k] + src["tracker"][k]
+            if k == "events"
+            else np.concatenate([dst["tracker"][k], src["tracker"][k]]))
+        for k in dst["tracker"]
+    }
+    counters = {}
+    for k, v in dst["counters"].items():
+        sv = src["counters"][k]
+        counters[k] = (
+            np.concatenate([v, sv]) if isinstance(v, np.ndarray) else v + sv
+        )
+    return {
+        "rings": list(dst["rings"]) + list(src["rings"]),
+        "tracker": tracker,
+        "counters": counters,
+    }
+
+
+class FleetSupervisor:
+    """Health-checked pool of monitor engines with lossless recovery.
+
+    Parameters
+    ----------
+    artifact:
+        A pre-baked :class:`QuantizedParams`.  The supervisor deliberately
+        refuses an fp32 checkpoint: workers must be rebuildable from an
+        immutable shared artifact, and quantise-once is what makes a
+        rebuilt worker numerically identical to the dead one.
+    n_streams / n_workers:
+        Global stream count, partitioned contiguously over the workers.
+    dispatch_deadline_s:
+        A worker round that takes longer than this (on ``clock``) is
+        classified as a stall in the incident log.
+    max_rebuilds:
+        After this many revivals a worker is retired and its streams are
+        migrated (statefully, bitwise) to the least-loaded survivor.
+    clock:
+        Zero-arg monotonic-seconds callable, or an object with ``now()``
+        (e.g. :class:`~repro.serving.faults.FaultClock` in tests).
+    faults:
+        Optional :class:`FaultPlan` — the deterministic chaos harness.
+        ``None`` (production) makes every fault seam a no-op.
+    """
+
+    def __init__(
+        self,
+        artifact: QuantizedParams,
+        cfg: CNNConfig,
+        *,
+        n_streams: int,
+        n_workers: int = 2,
+        dispatch_deadline_s: float = 30.0,
+        max_rebuilds: int = 3,
+        clock=None,
+        faults: FaultPlan | None = None,
+        **engine_kw,
+    ):
+        if not isinstance(artifact, QuantizedParams):
+            raise ValueError(
+                "FleetSupervisor requires a pre-baked QuantizedParams "
+                "artifact (quantize_params(...)): worker recovery rebuilds "
+                "engines from it, so it must be immutable and shared"
+            )
+        if n_streams < 1:
+            raise ValueError(f"n_streams must be >= 1, got {n_streams}")
+        if not 1 <= n_workers <= n_streams:
+            raise ValueError(
+                f"n_workers must be in 1..{n_streams} (one stream per worker "
+                f"minimum), got {n_workers}"
+            )
+        if dispatch_deadline_s <= 0:
+            raise ValueError(
+                f"dispatch_deadline_s must be positive, got {dispatch_deadline_s}"
+            )
+        self._qp = artifact
+        self.cfg = cfg
+        self.n_streams = n_streams
+        self.dispatch_deadline_s = float(dispatch_deadline_s)
+        self.max_rebuilds = int(max_rebuilds)
+        self._engine_kw = dict(engine_kw)
+        self._clock_obj = clock if clock is not None else time.monotonic
+        self._now = getattr(self._clock_obj, "now", self._clock_obj)
+        self.faults = faults
+        self.round = 0  # ingest/scoring round counter (fault plans key on it)
+        self.incidents: list[dict] = []
+        # chunk-fault observability (distinct from the engines' sanitize
+        # counters: these count what the *transport* did, per global stream)
+        self.faulted_chunks = np.zeros(n_streams, np.int64)
+
+        groups = np.array_split(np.arange(n_streams), n_workers)
+        self.workers = [
+            _Worker(i, self._build_engine(len(g)), [int(s) for s in g])
+            for i, g in enumerate(groups)
+        ]
+        self._route: dict[int, tuple[int, int]] = {}
+        for w in self.workers:
+            for local, g in enumerate(w.streams):
+                self._route[g] = (w.idx, local)
+
+    def _build_engine(self, n_streams: int) -> MonitorEngine:
+        return MonitorEngine(
+            self._qp, self.cfg, n_streams=n_streams, **self._engine_kw
+        )
+
+    # -- ingest --------------------------------------------------------------
+
+    def push(self, stream: int, samples: np.ndarray) -> int:
+        """Route one chunk to its worker (journaled for crash replay)."""
+        if stream not in self._route:
+            raise ValueError(
+                f"stream index {stream} out of range for a fleet with "
+                f"{self.n_streams} stream(s)"
+            )
+        w_idx, local = self._route[stream]
+        w = self.workers[w_idx]
+        x = np.asarray(samples, np.float32).reshape(-1)
+
+        fault = (
+            self.faults.chunk_fault(self.round, stream) if self.faults else None
+        )
+        if fault is not None:
+            self.faulted_chunks[stream] += 1
+            if fault.kind == "drop_chunk":
+                return 0  # the transport ate it
+            if fault.kind == "corrupt_chunk":
+                x = x.copy()
+                x[::7] = np.nan  # deterministic poison pattern
+            elif fault.kind == "jitter_chunk" and len(x) >= 2:
+                # content-preserving re-segmentation: same samples, two pushes
+                cut = max(1, min(len(x) - 1, int(len(x) * fault.magnitude)))
+                return self._deliver(w, local, x[:cut]) + self._deliver(
+                    w, local, x[cut:]
+                )
+        return self._deliver(w, local, x)
+
+    def _deliver(self, w: _Worker, local: int, chunk: np.ndarray) -> int:
+        # Journal BEFORE delivery: if the push itself dies mid-flight the
+        # replay still re-attempts it.  The journal stores the raw chunk
+        # (pre-sanitize); replaying through engine.push re-applies the same
+        # deterministic sanitize decisions and counters.
+        w.journal.append((local, chunk.copy()))
+        return w.engine.push(local, chunk)
+
+    # -- scoring -------------------------------------------------------------
+
+    def step(self) -> list[WindowScore]:
+        """Score one fleet round: at most one window per stream, across all
+        live workers.  Never raises on worker faults — crashes, stalls and
+        kills are caught, logged to :attr:`incidents`, and recovered
+        losslessly before the round completes."""
+        out: list[WindowScore] = []
+        for w in self.workers:
+            if not w.alive:
+                continue
+            out.extend(self._step_worker(w))
+        self.round += 1
+        return out
+
+    def _step_worker(self, w: _Worker) -> list[WindowScore]:
+        hook = None
+        if self.faults is not None:
+            for f in self.faults.worker_faults(self.round, w.idx):
+                if f.kind == "kill_worker":
+                    # the process died between rounds: the engine object is
+                    # simply gone — rebuild from artifact + snapshot + journal
+                    w.engine = None
+                    self._incident(w, "kill", "worker process died")
+                    self._revive(w)
+                    if not w.alive:  # retired into another worker
+                        return []
+                elif f.kind == "raise_forward":
+                    hook = self._raise_hook()
+                elif f.kind == "stall_forward":
+                    hook = self._stall_hook(f.magnitude)
+
+        t0 = self._now()
+        w.engine.fault_hook = hook
+        try:
+            scored = w.engine.step()
+        except Exception as exc:  # noqa: BLE001 — the whole point is to survive
+            elapsed = self._now() - t0
+            stalled = elapsed > self.dispatch_deadline_s
+            self._incident(
+                w,
+                "stall" if stalled else "crash",
+                f"{type(exc).__name__}: {exc} (round took {elapsed:.3f}s)",
+            )
+            self._revive(w)
+            if not w.alive:
+                return []
+            # transactional step committed nothing, so the re-run scores the
+            # exact same windows the failed attempt peeked
+            scored = w.engine.step()
+        finally:
+            if w.engine is not None:
+                w.engine.fault_hook = None
+
+        w.last_good = w.engine.snapshot()
+        w.journal.clear()
+        w.last_heartbeat = self._now()
+        return [
+            dataclasses.replace(ws, stream=w.streams[ws.stream]) for ws in scored
+        ]
+
+    def _raise_hook(self):
+        def hook(ids):
+            raise InjectedFault("injected forward crash")
+
+        return hook
+
+    def _stall_hook(self, magnitude: float):
+        hang = max(float(magnitude), 2.0 * self.dispatch_deadline_s)
+
+        def hook(ids):
+            # simulate the hang on the injectable clock, then fail the way a
+            # real watchdog does: abandon the dispatch
+            advance = getattr(self._clock_obj, "advance", None)
+            if advance is not None:
+                advance(hang)
+            raise StalledForward(f"forward hung {hang:.1f}s past deadline")
+
+        return hook
+
+    # -- recovery ------------------------------------------------------------
+
+    def _revive(self, w: _Worker):
+        """Rebuild a dead/crashed worker: fresh engine from the baked
+        artifact, restore the last-good snapshot, replay the journal.  The
+        result is bitwise the state at the moment of death."""
+        w.rebuilds += 1
+        engine = self._build_engine(len(w.streams))
+        engine.restore(w.last_good)
+        for local, chunk in w.journal:
+            engine.push(local, chunk)
+        w.engine = engine
+        if w.rebuilds > self.max_rebuilds:
+            self._reassign(w)
+
+    def _reassign(self, w: _Worker):
+        """Retire a worker that keeps dying: migrate its streams — with
+        their full revived state — into the least-loaded survivor, rebuilt
+        for the combined stream set.  Migration is bitwise lossless."""
+        survivors = [o for o in self.workers if o.alive and o is not w]
+        if not survivors:
+            # nowhere to move the streams: keep limping on rebuilds
+            return
+        target = min(survivors, key=lambda o: len(o.streams))
+        merged = _merge_snapshots(target.engine.snapshot(), w.engine.snapshot())
+        engine = self._build_engine(len(target.streams) + len(w.streams))
+        engine.restore(merged)
+        target.engine = engine
+        base = len(target.streams)
+        migrated = list(w.streams)
+        target.streams.extend(migrated)
+        for off, g in enumerate(migrated):
+            self._route[g] = (target.idx, base + off)
+        # the merged engine IS the new last-good state; pending journal
+        # entries from both workers are already baked into it
+        target.last_good = engine.snapshot()
+        target.journal.clear()
+        self._incident(
+            w,
+            "reassign",
+            f"retired after {w.rebuilds} rebuilds; streams "
+            f"{migrated} -> worker {target.idx}",
+        )
+        w.alive = False
+        w.engine = None
+        w.streams = []
+        w.journal.clear()
+
+    def _incident(self, w: _Worker, kind: str, detail: str):
+        self.incidents.append(
+            {"round": self.round, "worker": w.idx, "kind": kind,
+             "detail": detail}
+        )
+
+    # -- introspection / lifecycle -------------------------------------------
+
+    def health(self) -> list[dict]:
+        """Per-worker health: liveness, stream assignment, rebuild count,
+        heartbeat age on the supervisor's clock."""
+        now = self._now()
+        report = []
+        for w in self.workers:
+            report.append(
+                {
+                    "worker": w.idx,
+                    "alive": w.alive,
+                    "streams": list(w.streams),
+                    "rebuilds": w.rebuilds,
+                    "heartbeat_age_s": (
+                        None if w.last_heartbeat is None else now - w.last_heartbeat
+                    ),
+                    "rounds": None if w.engine is None else w.engine.rounds,
+                }
+            )
+        return report
+
+    def drain(self) -> list[WindowScore]:
+        """Run rounds until no worker has a complete window buffered."""
+        out: list[WindowScore] = []
+        while True:
+            scored = self.step()
+            if not scored:
+                return out
+            out.extend(scored)
+
+    def finalize(self) -> list[list[TrackEvent]]:
+        """Flush still-open tracks; returns per-GLOBAL-stream event lists."""
+        out: list[list[TrackEvent]] = [[] for _ in range(self.n_streams)]
+        for w in self.workers:
+            if not w.alive:
+                continue
+            events = w.engine.finalize()
+            for local, g in enumerate(w.streams):
+                out[g] = events[local]
+        return out

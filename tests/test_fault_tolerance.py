@@ -20,7 +20,9 @@ import pytest
 from repro.data import features
 from repro.models import cnn1d
 from repro.serving.engine import MonitorEngine, SanitizePolicy, StreamRing
+from repro.serving.faults import Fault, FaultClock, FaultPlan
 from repro.serving.quantized_params import quantize_params
+from repro.serving.supervisor import FleetSupervisor
 
 TRACK_KW = dict(ema_alpha=0.7, enter_threshold=0.02, exit_threshold=0.01,
                 min_duration=1)
@@ -297,3 +299,212 @@ def test_without_sanitize_nan_poisons_only_its_own_stream():
     np.testing.assert_array_equal(  # the blast radius: one row, one stream
         np.asarray(scores[1], np.float64), np.asarray(ref_scores[1], np.float64)
     )
+
+
+# ---------------------------------------------------------------------------
+# Fleet supervisor + deterministic fault injection (the chaos suite)
+# ---------------------------------------------------------------------------
+
+SUP_KW = dict(feature_kind="zcr", batch_slots=2,
+              sanitize=SanitizePolicy(nonfinite="reject"), **TRACK_KW)
+
+
+def _fleet(detector, n_streams, n_workers, **kw):
+    cfg, qp = detector
+    return FleetSupervisor(
+        qp, cfg, n_streams=n_streams, n_workers=n_workers,
+        clock=FaultClock(), dispatch_deadline_s=1.0, **SUP_KW, **kw,
+    )
+
+
+@pytest.fixture(scope="module")
+def fleet_scene(detector):
+    """One shared scene + fault-free supervisor baseline for the whole chaos
+    section: 4 streams, uneven delivery, scores and events to compare every
+    faulted run against."""
+    rng = np.random.default_rng(21)
+    audio = _scene_audio(rng, 4, 5)
+    schedule = _delivery_schedule(rng, audio)
+    sup = _fleet(detector, 4, 2)
+    scores = _drive(sup, audio, schedule)
+    events = sup.finalize()
+    assert sum(len(e) for e in events) > 0
+    return audio, schedule, scores, events
+
+
+def _assert_streams_bitwise(scores, events, ref_scores, ref_events, streams):
+    for s in streams:
+        np.testing.assert_array_equal(
+            np.asarray(scores[s], np.float64),
+            np.asarray(ref_scores[s], np.float64),
+            err_msg=f"stream {s} scores diverged",
+        )
+        assert events[s] == ref_events[s], f"stream {s} events diverged"
+
+
+def test_fleet_without_faults_matches_single_engine(detector, fleet_scene):
+    """Conformance: partitioning streams over a worker pool is numerically
+    invisible — the fleet's per-stream scores and events equal one monolithic
+    engine serving all streams, bitwise, for every pool size."""
+    cfg, qp = detector
+    audio, schedule, sup_scores, sup_events = fleet_scene
+    mono = MonitorEngine(qp, cfg, n_streams=4, **SUP_KW)
+    ref_scores = _drive(mono, audio, schedule)
+    ref_events = mono.finalize()
+    _assert_streams_bitwise(sup_scores, sup_events, ref_scores, ref_events,
+                            range(4))
+    sup4 = _fleet(detector, 4, 4)  # one worker per stream
+    scores4 = _drive(sup4, audio, schedule)
+    _assert_streams_bitwise(scores4, sup4.finalize(), ref_scores, ref_events,
+                            range(4))
+
+
+def test_lossy_chunk_faults_isolate_target_streams(detector, fleet_scene):
+    """Dropped and corrupted chunks hurt exactly their target stream: every
+    other stream — including the target's co-batched neighbour on the same
+    worker — stays bitwise identical to the fault-free run."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    plan = FaultPlan([
+        Fault("drop_chunk", round=1, stream=0),
+        Fault("corrupt_chunk", round=2, stream=3),
+    ])
+    assert plan.affected_streams == {0, 3}
+    sup = _fleet(detector, 4, 2, faults=plan)
+    scores = _drive(sup, audio, schedule)
+    events = sup.finalize()
+    _assert_streams_bitwise(scores, events, ref_scores, ref_events, {1, 2})
+    assert sup.faulted_chunks.tolist() == [1, 0, 0, 1]
+    # the corrupt chunk was NaN-poisoned and the reject policy refused it
+    assert sup.workers[sup._route[3][0]].engine.rejected_chunks[
+        sup._route[3][1]] == 1
+    # the damage is real: the target streams scored fewer windows
+    assert len(scores[0]) < len(ref_scores[0])
+
+
+def test_jitter_resegmentation_is_bitwise_invisible(detector, fleet_scene):
+    """Jitter re-segments a chunk into two pushes with identical content —
+    ALL streams, including the jittered one, must match the fault-free run
+    bitwise (the ring's hop alignment doesn't care about chunk boundaries)."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    plan = FaultPlan([
+        Fault("jitter_chunk", round=0, stream=1, magnitude=0.4),
+        Fault("jitter_chunk", round=3, stream=2, magnitude=0.7),
+    ])
+    assert plan.affected_streams == set()
+    sup = _fleet(detector, 4, 2, faults=plan)
+    scores = _drive(sup, audio, schedule)
+    _assert_streams_bitwise(scores, sup.finalize(), ref_scores, ref_events,
+                            range(4))
+    assert sup.faulted_chunks.sum() == 2
+
+
+def test_worker_crash_stall_kill_are_lossless(detector, fleet_scene):
+    """The tentpole chaos contract: a crashing forward, a stalled forward
+    (detected via the dispatch deadline on the injected clock) and a killed
+    worker all recover losslessly — every stream of every worker bitwise
+    matches the fault-free run, and the incident log classifies each fault
+    correctly."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    plan = FaultPlan([
+        Fault("raise_forward", round=1, worker=0),
+        Fault("stall_forward", round=2, worker=1, magnitude=5.0),
+        Fault("kill_worker", round=3, worker=0),
+    ])
+    sup = _fleet(detector, 4, 2, faults=plan)
+    scores = _drive(sup, audio, schedule)
+    events = sup.finalize()
+    _assert_streams_bitwise(scores, events, ref_scores, ref_events, range(4))
+    assert [i["kind"] for i in sup.incidents] == ["crash", "stall", "kill"]
+    assert [i["worker"] for i in sup.incidents] == [0, 1, 0]
+    assert sup.workers[0].rebuilds == 2 and sup.workers[1].rebuilds == 1
+    assert all(w.alive for w in sup.workers)
+
+
+def test_reassignment_after_repeated_kills_is_lossless(detector, fleet_scene):
+    """A worker that dies more than max_rebuilds times is retired and its
+    streams migrate — with their full state — to the survivor.  The merged
+    worker's output stays bitwise identical for ALL streams, routing follows
+    the streams, and health reports the retirement."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    plan = FaultPlan([
+        Fault("kill_worker", round=1, worker=0),
+        Fault("kill_worker", round=2, worker=0),
+    ])
+    sup = _fleet(detector, 4, 2, max_rebuilds=1, faults=plan)
+    scores = _drive(sup, audio, schedule)
+    events = sup.finalize()
+    _assert_streams_bitwise(scores, events, ref_scores, ref_events, range(4))
+    assert not sup.workers[0].alive
+    assert sup.workers[1].streams == [2, 3, 0, 1]
+    assert sup._route[0] == (1, 2) and sup._route[1] == (1, 3)
+    kinds = [i["kind"] for i in sup.incidents]
+    assert kinds == ["kill", "kill", "reassign"]
+    health = sup.health()
+    assert health[0]["alive"] is False and health[0]["streams"] == []
+    assert health[1]["streams"] == [2, 3, 0, 1]
+
+
+def test_generated_plans_complete_and_isolate(detector, fleet_scene):
+    """Seeded random plans (the chaos sweep): whatever the mix of faults,
+    the supervisor finishes the scene without raising and every stream not
+    hit by a lossy fault is bitwise identical to the fault-free run."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    for seed in (0, 1, 2):
+        plan = FaultPlan.generate(
+            seed, n_streams=4, n_workers=2, n_rounds=len(schedule), n_faults=5
+        )
+        sup = _fleet(detector, 4, 2, faults=plan)
+        scores = _drive(sup, audio, schedule)
+        events = sup.finalize()
+        clean = set(range(4)) - plan.affected_streams
+        _assert_streams_bitwise(scores, events, ref_scores, ref_events, clean)
+        assert len(sup.health()) == 2
+
+
+def test_fault_plan_determinism_and_json_roundtrip(tmp_path):
+    p1 = FaultPlan.generate(42, n_streams=8, n_workers=2, n_rounds=30)
+    p2 = FaultPlan.generate(42, n_streams=8, n_workers=2, n_rounds=30)
+    assert p1.faults == p2.faults
+    p3 = FaultPlan.from_json(p1.to_json())
+    assert p3.faults == p1.faults and p3.seed == 42
+    # the CLI writes a plan the supervisor can load
+    from repro.serving import faults as faults_mod
+    out = tmp_path / "plan.json"
+    faults_mod.main(["--seed", "7", "--streams", "4", "--workers", "2",
+                     "--rounds", "10", "--out", str(out)])
+    plan = FaultPlan.from_json(out.read_text())
+    assert plan.seed == 7 and len(plan.faults) > 0
+
+
+def test_fault_validation():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        Fault("explode", 0, stream=1)
+    with pytest.raises(ValueError, match="target stream"):
+        Fault("drop_chunk", 0)
+    with pytest.raises(ValueError, match="target worker"):
+        Fault("kill_worker", 0)
+
+
+def test_supervisor_health_heartbeat_and_validation(detector):
+    cfg, qp = detector
+    clock = FaultClock(tick=0.25)
+    sup = FleetSupervisor(
+        qp, cfg, n_streams=2, n_workers=2, clock=clock, **SUP_KW
+    )
+    assert all(h["heartbeat_age_s"] is None for h in sup.health())
+    sup.push(0, np.zeros(features.N_SAMPLES, np.float32))
+    sup.step()
+    h = sup.health()
+    assert h[0]["rounds"] == 1 and h[1]["rounds"] == 0  # only stream 0 scored
+    assert all(hh["heartbeat_age_s"] is not None and hh["heartbeat_age_s"] >= 0
+               for hh in h)
+    with pytest.raises(ValueError, match="out of range"):
+        sup.push(5, np.zeros(4, np.float32))
+
+    params = cnn1d.init_params(jax.random.PRNGKey(1), cfg)
+    with pytest.raises(ValueError, match="pre-baked"):
+        FleetSupervisor(params, cfg, n_streams=2, **SUP_KW)
+    with pytest.raises(ValueError, match="n_workers"):
+        FleetSupervisor(qp, cfg, n_streams=2, n_workers=3, **SUP_KW)
+    with pytest.raises(ValueError, match="dispatch_deadline_s"):
+        FleetSupervisor(qp, cfg, n_streams=2, dispatch_deadline_s=0, **SUP_KW)
