@@ -38,6 +38,14 @@ esac
 # ${ARR[@]+...}: empty-array expansion is fatal under `set -u` on bash < 4.4
 python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} ${COV[@]+"${COV[@]}"}
 
+# Chaos suite under a hard wall-clock cap: a hung supervisor recovery (a
+# revive loop that never converges, a stall that deadlocks a worker) is
+# exactly the regression this suite exists to catch, and a hang must fail
+# CI loudly, not eat the job timeout.  faulthandler dumps all thread stacks
+# when `timeout` sends SIGINT so the hang site lands in the CI log.
+timeout --signal=INT 300 python -X faulthandler -m pytest -x -q \
+  tests/test_fault_tolerance.py
+
 # Benchmark smoke: smallest shapes only, proves the kernel + serving paths
 # still run end-to-end (does not touch the committed BENCH_*.json files).
 SMOKE=1 python -m benchmarks.bench_kernels
@@ -56,3 +64,13 @@ python -m repro.launch.monitor --seconds 2 --prune 2 \
 # On-device front-end smoke: raw-window dispatch with the DSP front-end
 # fused into the jitted program (random weights: plumbing only, fast).
 python -m repro.launch.monitor --seconds 2 --device-features --random
+
+# Fault-injection demo smoke: a seeded plan (crashes, stalls, kills, chunk
+# faults) through the fleet supervisor; the driver must survive every
+# incident and print the incident log (random weights: plumbing only).
+FAULT_PLAN="$(mktemp /tmp/ci_fault_plan.XXXXXX.json)"
+trap 'rm -f "$FAULT_PLAN"' EXIT
+python -m repro.serving.faults --seed 7 --streams 3 --workers 2 \
+  --rounds 12 --out "$FAULT_PLAN"
+timeout --signal=INT 300 python -m repro.launch.monitor --seconds 2 \
+  --workers 2 --faults "$FAULT_PLAN" --random

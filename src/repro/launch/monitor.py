@@ -96,6 +96,14 @@ def main(argv=None):
                          "program (engine submits raw windows; no host "
                          "feature extraction on the serving path)")
     ap.add_argument("--slots", type=int, default=8, help="micro-batch slot count")
+    ap.add_argument("--workers", type=int, default=None, metavar="N",
+                    help="serve through the fault-tolerant fleet supervisor "
+                         "with N health-checked workers instead of one "
+                         "monolithic engine (bitwise-identical results)")
+    ap.add_argument("--faults", default=None, metavar="PLAN.json",
+                    help="inject a deterministic fault plan (written by "
+                         "python -m repro.serving.faults) through the fleet "
+                         "supervisor; implies --workers 2 unless given")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--random", action="store_true",
                     help="random-init weights (plumbing smoke, no real detections)")
@@ -145,19 +153,55 @@ def main(argv=None):
         print(f"monitor: mixed-precision artifact — {modes}, "
               f"default {policy.default.value}")
 
-    engine = MonitorEngine(
-        params, cfg,
-        n_streams=args.streams,
-        feature_kind=args.feature,
-        on_device_features=args.device_features,
-        batch_slots=args.slots,
-        precision=args.precision,
-        prune=prune_spec,
-        policy=policy,
-        shards=args.shards,
-    )
+    fleet = args.workers is not None or args.faults is not None
+    if fleet:
+        from repro.serving.engine import SanitizePolicy
+        from repro.serving.faults import FaultClock, FaultPlan
+        from repro.serving.quantized_params import quantize_params
+        from repro.serving.supervisor import FleetSupervisor
+
+        plan = None
+        if args.faults is not None:
+            with open(args.faults) as fh:
+                plan = FaultPlan.from_json(fh.read())
+            print(f"monitor: fault plan {args.faults} "
+                  f"({len(plan.faults)} fault(s), seed {plan.seed})")
+        # The supervisor serves an immutable baked artifact (that is what
+        # makes rebuilding a dead worker exact), so bake the deploy-time
+        # decisions here instead of inside the engine.
+        qp = quantize_params(
+            params, cfg, mode=args.precision, prune=prune_spec, policy=policy,
+            feature_kind=args.feature if args.device_features else None,
+        )
+        n_workers = args.workers if args.workers is not None else 2
+        engine = FleetSupervisor(
+            qp, cfg,
+            n_streams=args.streams,
+            n_workers=n_workers,
+            faults=plan,
+            clock=FaultClock() if plan is not None else None,
+            sanitize=SanitizePolicy(),
+            feature_kind=args.feature,
+            on_device_features=args.device_features,
+            batch_slots=args.slots,
+            shards=args.shards,
+        )
+        print(f"monitor: fleet supervisor, {n_workers} worker(s) over "
+              f"{args.streams} stream(s)")
+    else:
+        engine = MonitorEngine(
+            params, cfg,
+            n_streams=args.streams,
+            feature_kind=args.feature,
+            on_device_features=args.device_features,
+            batch_slots=args.slots,
+            precision=args.precision,
+            prune=prune_spec,
+            policy=policy,
+            shards=args.shards,
+        )
     if args.shards:
-        print(f"monitor: sharded dispatch over {engine.shards} device(s)")
+        print(f"monitor: sharded dispatch over {args.shards} device(s)")
     if args.device_features:
         print(f"monitor: on-device {args.feature} front-end (raw-window dispatch)")
 
@@ -194,6 +238,18 @@ def main(argv=None):
         f"{engine.padded_slots} padded slots, "
         f"{engine.dropped_samples} dropped samples"
     )
+    if fleet:
+        for h in engine.health():
+            age = ("never" if h["heartbeat_age_s"] is None
+                   else f"{h['heartbeat_age_s']:.3f}s ago")
+            state = "alive" if h["alive"] else "RETIRED"
+            print(f"  worker {h['worker']}: {state}, streams {h['streams']}, "
+                  f"{h['rebuilds']} rebuild(s), last heartbeat {age}")
+        if engine.incidents:
+            print(f"monitor: survived {len(engine.incidents)} incident(s):")
+            for i in engine.incidents:
+                print(f"    round {i['round']:3d} worker {i['worker']} "
+                      f"[{i['kind']}] {i['detail']}")
     for s, (evs, (t_on, t_off)) in enumerate(zip(events, truths)):
         print(f"stream {s}: ground truth UAV at {t_on:.1f}-{t_off:.1f}s, {len(evs)} event(s)")
         for e in evs:

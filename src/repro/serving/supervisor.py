@@ -348,6 +348,22 @@ class FleetSupervisor:
 
     # -- introspection / lifecycle -------------------------------------------
 
+    @property
+    def windows_scored(self) -> int:
+        return sum(w.engine.windows_scored for w in self.workers if w.alive)
+
+    @property
+    def forward_calls(self) -> int:
+        return sum(w.engine.forward_calls for w in self.workers if w.alive)
+
+    @property
+    def padded_slots(self) -> int:
+        return sum(w.engine.padded_slots for w in self.workers if w.alive)
+
+    @property
+    def dropped_samples(self) -> int:
+        return sum(w.engine.dropped_samples for w in self.workers if w.alive)
+
     def health(self) -> list[dict]:
         """Per-worker health: liveness, stream assignment, rebuild count,
         heartbeat age on the supervisor's clock."""
