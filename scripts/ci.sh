@@ -27,7 +27,8 @@ case "${1:-}" in
     ;;
   --cov)
     if python -c "import pytest_cov" 2>/dev/null; then
-      COV=(--cov=repro.serving --cov=repro.core.pruning
+      COV=(--cov=repro.serving --cov=repro.serving.batching
+           --cov=repro.core.pruning
            --cov=repro.core.precision_policy --cov=repro.data.features_jax
            --cov-report=term-missing --cov-fail-under=85)
     else
@@ -64,6 +65,13 @@ python -m repro.launch.monitor --seconds 2 --prune 2 \
 # On-device front-end smoke: raw-window dispatch with the DSP front-end
 # fused into the jitted program (random weights: plumbing only, fast).
 python -m repro.launch.monitor --seconds 2 --device-features --random
+
+# High-stream adaptive smoke: 256 streams through the shared dispatch core
+# on the adaptive slot ladder — proves the fleet-scale admission/fairness
+# path boots and drains end-to-end, capped so a ladder-retrace or ready-
+# scan regression fails loudly instead of eating the job timeout.
+timeout --signal=INT 300 python -m repro.launch.monitor --seconds 2 \
+  --streams 256 --adaptive-slots --random
 
 # Fault-injection demo smoke: a seeded plan (crashes, stalls, kills, chunk
 # faults) through the fleet supervisor; the driver must survive every

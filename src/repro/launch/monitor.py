@@ -96,6 +96,15 @@ def main(argv=None):
                          "program (engine submits raw windows; no host "
                          "feature extraction on the serving path)")
     ap.add_argument("--slots", type=int, default=8, help="micro-batch slot count")
+    ap.add_argument("--adaptive-slots", action="store_true",
+                    help="grow/shrink micro-batch blocks over a power-of-two "
+                         "slot ladder to fit the ready backlog instead of "
+                         "padding dead slots with silence (bitwise-identical "
+                         "scores; shapes are pre-jitted)")
+    ap.add_argument("--max-streams", type=int, default=None, metavar="N",
+                    help="admit at most N distinct streams (first come, "
+                         "first served); chunks for later streams are "
+                         "refused and counted, never scored")
     ap.add_argument("--workers", type=int, default=None, metavar="N",
                     help="serve through the fault-tolerant fleet supervisor "
                          "with N health-checked workers instead of one "
@@ -153,6 +162,13 @@ def main(argv=None):
         print(f"monitor: mixed-precision artifact — {modes}, "
               f"default {policy.default.value}")
 
+    admission = None
+    if args.max_streams is not None:
+        from repro.serving.batching import AdmissionPolicy
+
+        admission = AdmissionPolicy(max_streams=args.max_streams)
+        print(f"monitor: admission cap {args.max_streams} stream(s)")
+
     fleet = args.workers is not None or args.faults is not None
     if fleet:
         from repro.serving.engine import SanitizePolicy
@@ -185,6 +201,8 @@ def main(argv=None):
             on_device_features=args.device_features,
             batch_slots=args.slots,
             shards=args.shards,
+            adaptive_slots=args.adaptive_slots,
+            admission=admission,
         )
         print(f"monitor: fleet supervisor, {n_workers} worker(s) over "
               f"{args.streams} stream(s)")
@@ -199,7 +217,12 @@ def main(argv=None):
             prune=prune_spec,
             policy=policy,
             shards=args.shards,
+            adaptive_slots=args.adaptive_slots,
+            admission=admission,
         )
+    if args.adaptive_slots:
+        ladder = engine.precompile()
+        print(f"monitor: adaptive slots, pre-jitted ladder {list(ladder)}")
     if args.shards:
         print(f"monitor: sharded dispatch over {args.shards} device(s)")
     if args.device_features:
@@ -238,6 +261,16 @@ def main(argv=None):
         f"{engine.padded_slots} padded slots, "
         f"{engine.dropped_samples} dropped samples"
     )
+    if args.adaptive_slots:
+        hist = ", ".join(
+            f"{k}x{v}" for k, v in sorted(engine.slot_histogram.items())
+        )
+        print(f"monitor: slot histogram {hist or '(no blocks)'}")
+    if args.max_streams is not None:
+        refused = engine.refused_chunks
+        n_refused = int(np.count_nonzero(refused))
+        print(f"monitor: {n_refused} stream(s) refused at admission, "
+              f"{int(refused.sum())} chunk(s) dropped")
     if fleet:
         for h in engine.health():
             age = ("never" if h["heartbeat_age_s"] is None

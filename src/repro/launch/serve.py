@@ -1,11 +1,21 @@
 """LM serving driver: batched prefill + decode with a continuous-batching
 queue — ``python -m repro.launch.serve --arch <id> --smoke``.
 
-Production-shaped: requests enter a queue, are batched to the compiled batch
-size (padding slots carry a dead request), prefilled in one shot, then
-decoded step-locked with per-slot stop handling.  On the dry-run meshes the
-same prefill/decode programs are exactly what launch/dryrun.py lowers for
-the prefill_32k / decode_32k / long_500k cells.
+Production-shaped: requests enter the shared
+:class:`~repro.serving.batching.DispatchCore` queue (the same core the
+detector fleet's ``MonitorEngine`` runs on), are batched to a compiled slot
+count (padding slots carry a dead request, or — with ``adaptive_slots=True``
+— the block shrinks over the power-of-two ladder to fit the tail of the
+queue), prefilled in one shot, then decoded step-locked with per-slot stop
+handling.  On the dry-run meshes the same prefill/decode programs are
+exactly what launch/dryrun.py lowers for the prefill_32k / decode_32k /
+long_500k cells.
+
+Unlike the detector datapath, LM decode is *not* batch-composition
+independent (prompts are left-padded to the batch's longest prompt with no
+pad masking), so the core is run with synchronous submit and no cross-batch
+bitwise claim — what it shares is the queue/slot/commit machinery, not the
+parity guarantee.
 """
 from __future__ import annotations
 
@@ -22,6 +32,7 @@ from repro.configs import get_config
 from repro.distributed.sharding import ShardingRules, use_rules
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T
+from repro.serving.batching import DispatchCore, SlotPolicy
 
 
 @dataclasses.dataclass
@@ -33,9 +44,25 @@ class Request:
 
 
 class BatchedServer:
-    """Fixed-slot continuous batching server over prefill/decode programs."""
+    """Continuous-batching server over prefill/decode programs, running on
+    the shared :class:`~repro.serving.batching.DispatchCore`.
 
-    def __init__(self, cfg, params, *, batch_slots: int = 4, max_seq: int = 256):
+    ``batch_slots`` fixes the compiled batch size; dead slots in a partial
+    final batch carry a dead request (``rid=-1``) exactly as before.
+    ``adaptive_slots=True`` instead lets the slot policy shrink the final
+    blocks over a power-of-two ladder, trading a few extra compiled batch
+    shapes for not decoding dead slots.
+    """
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        batch_slots: int = 4,
+        max_seq: int = 256,
+        adaptive_slots: bool = False,
+    ):
         self.cfg = cfg
         self.params = params
         self.slots = batch_slots
@@ -47,19 +74,33 @@ class BatchedServer:
             lambda p, tok, c, pos: T.decode_step(p, tok, c, pos, cfg, max_seq),
             donate_argnums=(2,),
         )
+        self._greedy = True  # per-serve() decode mode, read by _submit
+        # Synchronous program (prefill+decode completes before the next
+        # block is packed), so no harvest stage and a single in-flight slot.
+        self._core = DispatchCore(
+            submit=self._submit,
+            harvest=None,
+            slot_policy=SlotPolicy(batch_slots, adaptive=adaptive_slots),
+            inflight=1,
+        )
+
+    @property
+    def slot_histogram(self) -> dict[int, int]:
+        """Blocks dispatched per slot shape (adaptive observability)."""
+        return dict(self._core.slot_histogram)
+
+    def _submit(self, live: list[Request], slots: int) -> list[Request]:
+        batch = list(live) + [  # pad dead slots
+            Request(rid=-1, prompt=live[0].prompt, max_new=0)
+            for _ in range(slots - len(live))
+        ]
+        return self._serve_batch(batch, self._greedy)[: len(live)]
 
     def serve(self, requests: list[Request], greedy: bool = True) -> list[Request]:
-        done: list[Request] = []
-        queue = list(requests)
-        while queue:
-            batch = queue[: self.slots]
-            queue = queue[self.slots :]
-            batch = batch + [  # pad dead slots
-                Request(rid=-1, prompt=batch[0].prompt, max_new=0)
-                for _ in range(self.slots - len(batch))
-            ]
-            done.extend(r for r in self._serve_batch(batch, greedy) if r.rid >= 0)
-        return done
+        """Serve the requests in arrival order; returns them completed."""
+        self._greedy = greedy
+        self._core.enqueue(requests)
+        return self._core.drain()
 
     def _serve_batch(self, batch: list[Request], greedy: bool) -> list[Request]:
         s = max(len(r.prompt) for r in batch)
@@ -89,6 +130,11 @@ def main(argv=None):
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument(
+        "--adaptive-slots", action="store_true",
+        help="shrink final blocks over the slot ladder instead of padding "
+             "dead requests",
+    )
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -98,7 +144,10 @@ def main(argv=None):
     rules = ShardingRules(mesh)
     with mesh, use_rules(rules):
         params = T.init_params(jax.random.PRNGKey(0), cfg)
-        server = BatchedServer(cfg, params, batch_slots=args.slots)
+        server = BatchedServer(
+            cfg, params, batch_slots=args.slots,
+            adaptive_slots=args.adaptive_slots,
+        )
         rng = np.random.default_rng(0)
         reqs = [
             Request(rid=i, prompt=rng.integers(0, cfg.vocab, rng.integers(4, 24)).astype(np.int32), max_new=args.max_new)
@@ -109,6 +158,7 @@ def main(argv=None):
         dt = time.time() - t0
         n_tok = sum(len(r.out) for r in done)
         print(f"served {len(done)} requests, {n_tok} tokens in {dt:.2f}s ({n_tok/dt:.1f} tok/s)")
+        print(f"slot histogram: {server.slot_histogram}")
         for r in done:
             print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {list(r.out)}")
     return done

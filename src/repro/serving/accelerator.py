@@ -293,6 +293,50 @@ def accelerator_forward_sharded(
     )
 
 
+def precompile_slot_shapes(
+    qp: QuantizedParams,
+    cfg: CNNConfig,
+    slot_counts,
+    *,
+    row_width: int | None = None,
+    mesh: Mesh | None = None,
+    axis_name: str | None = None,
+    interpret: bool | None = None,
+    raw_windows: bool = False,
+) -> None:
+    """Trace and compile the forward once per batch (slot) shape.
+
+    Adaptive batch-slot sizing dispatches a small ladder of block shapes
+    instead of one fixed ``batch_slots``; each distinct shape costs one jit
+    trace.  Serving pays that cost at whatever round first uses the shape —
+    a visible latency spike — unless the shapes are compiled up front.  This
+    warms the jit cache with a zeros block per ladder value (zeros = the
+    engine's silence padding, so no NaN hazards) and blocks until every
+    program is built.  Per-sample activation scales make the traced numbers
+    irrelevant — only the shapes enter the cache key.
+    """
+    if not isinstance(qp, QuantizedParams):
+        raise TypeError(
+            f"precompile_slot_shapes needs a baked QuantizedParams artifact, "
+            f"got {type(qp).__name__}"
+        )
+    if row_width is None:
+        row_width = features_jax.N_SAMPLES if raw_windows else cfg.input_len
+    for slots in sorted(set(int(s) for s in slot_counts)):
+        x = jnp.zeros((slots, row_width), jnp.float32)
+        if mesh is not None:
+            out = accelerator_forward_sharded(
+                qp, x, cfg, mesh=mesh,
+                axis_name=STREAM_AXIS if axis_name is None else axis_name,
+                interpret=interpret, raw_windows=raw_windows,
+            )
+        else:
+            out = accelerator_forward(
+                qp, x, cfg, interpret=interpret, raw_windows=raw_windows
+            )
+        out.block_until_ready()
+
+
 def deviation_report(
     params: dict, x: jax.Array, cfg: CNNConfig, *, per_sample_acts: bool = True
 ) -> dict:

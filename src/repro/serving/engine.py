@@ -8,11 +8,18 @@ This module scales that loop to N concurrent streams:
 
 * **per-stream ring buffers** (:class:`StreamRing`) absorb raw audio pushed
   in arbitrary chunk sizes and emit hop-aligned 0.8 s windows;
-* **dynamic micro-batching** packs the ready windows of one round (at most
-  one per stream) into fixed-size slots of one jitted
-  :func:`~repro.serving.accelerator.accelerator_forward` program, padding
-  dead slots with silence exactly like ``launch/serve.py`` pads dead
-  requests — one compiled program regardless of how many streams are live;
+* **continuous micro-batching** packs each round's ready windows into slot
+  blocks of one jitted :func:`~repro.serving.accelerator.accelerator_forward`
+  program via the shared :class:`~repro.serving.batching.DispatchCore` (the
+  same core ``launch/serve.py``'s ``BatchedServer`` runs on): fixed
+  ``batch_slots`` blocks with silence-padded dead slots by default, or —
+  with ``adaptive_slots=True`` — blocks grown/shrunk over a small
+  pre-jittable ladder to fit the backlog, so one live stream dispatches a
+  1-slot block instead of padding 7/8;
+* **admission control** (:class:`~repro.serving.batching.AdmissionPolicy`)
+  for fleet scale: cap the distinct streams admitted, cap windows drained
+  per stream per round with a depth-fair round budget, and evict streams
+  that persistently overflow their rings;
 * a **vectorised tracker** (:class:`~repro.serving.tracker.VectorTemporalTracker`)
   advances all N streams' EMA/hysteresis/min-duration state in one numpy
   pass per round.
@@ -32,7 +39,6 @@ on top of this class.
 """
 from __future__ import annotations
 
-import collections
 import dataclasses
 
 import jax
@@ -43,7 +49,18 @@ from repro.data import features
 from repro.distributed.sharding import stream_mesh
 from repro.kernels.backend import resolve_interpret
 from repro.models.cnn1d import CNNConfig
-from repro.serving.accelerator import accelerator_forward, accelerator_forward_sharded
+from repro.serving.accelerator import (
+    accelerator_forward,
+    accelerator_forward_sharded,
+    precompile_slot_shapes,
+)
+from repro.serving.batching import (
+    AdmissionPolicy,
+    BlockPool,
+    DispatchCore,
+    SlotPolicy,
+    fair_allocation,
+)
 from repro.serving.quantized_params import (
     QuantizedParams,
     quantize_params,
@@ -131,6 +148,22 @@ class StreamRing:
             return None
         idx = (self._r + np.arange(self.window)) % self.capacity
         return self._buf[idx].copy()
+
+    def peek_windows(self, k: int) -> np.ndarray:
+        """The next ``k`` hop-aligned windows *without* consuming them, as a
+        ``(k, window)`` array — the multi-window generalisation of
+        :meth:`peek_window` for a round that drains a backlog.  Raises if
+        fewer than ``k`` complete windows are buffered."""
+        if k < 1:
+            raise ValueError(f"k must be >= 1, got {k}")
+        if self.ready < k:
+            raise ValueError(f"{k} window(s) requested, only {self.ready} ready")
+        idx = (
+            self._r
+            + np.arange(k)[:, None] * self.hop
+            + np.arange(self.window)[None, :]
+        ) % self.capacity
+        return self._buf[idx]  # fancy indexing: already a copy
 
     def advance(self):
         """Consume one hop off the front (commit the last peeked window)."""
@@ -313,6 +346,9 @@ class MonitorEngine:
         shards: int | None = None,
         mesh: jax.sharding.Mesh | None = None,
         inflight: int = 2,
+        adaptive_slots: bool = False,
+        min_slots: int = 1,
+        admission: AdmissionPolicy | None = None,
         ema_alpha: float = 0.4,
         enter_threshold: float = 0.65,
         exit_threshold: float = 0.35,
@@ -408,45 +444,78 @@ class MonitorEngine:
             exit_threshold=exit_threshold,
             min_duration=min_duration,
         )
-        # Reused dispatch buffers: one fixed-slot block per inflight depth
-        # plus one being packed.  jax.device_put on CPU may alias host memory
-        # zero-copy, so a block must never be rewritten while its dispatch is
-        # still in flight — rotating over ``inflight + 1`` buffers guarantees
-        # the buffer being packed is (inflight + 1) submissions old, and at
-        # most ``inflight`` submissions are ever unharvested.
-        self._blocks = np.zeros(
-            (self._inflight + 1, batch_slots, self._in_width), np.float32
+        # The shared continuous-batching core (serving/batching.py): ladder
+        # of dispatchable slot shapes (fixed = always batch_slots, adaptive
+        # = power-of-two multiples of the shard count), the preallocated
+        # inflight+1 block-buffer rotation, and the slot-chunked dispatch
+        # loop with the fault seam — the machinery launch/serve.py's
+        # BatchedServer runs on too.
+        self.slot_policy = SlotPolicy(
+            batch_slots,
+            adaptive=adaptive_slots,
+            min_slots=min_slots,
+            multiple=self.shards,
         )
-        self._block_i = 0
+        self.adaptive_slots = self.slot_policy.adaptive
+        self._pool = BlockPool(self._in_width, inflight)
+        self._core = DispatchCore(
+            submit=self._submit_rows,
+            harvest=lambda buf: np.asarray(buf.block_until_ready()),
+            slot_policy=self.slot_policy,
+            inflight=inflight,
+        )
+        # Stream admission / per-tenant fairness: the defaults reproduce the
+        # classic behaviour (every stream admitted, one window per stream
+        # per round, no budget, no eviction) exactly.
+        self.admission = admission if admission is not None else AdmissionPolicy()
+        self._admitted = np.ones(n_streams, bool)
+        self._seen = np.zeros(n_streams, bool)
+        self._n_seen = 0
+        self._overflow_rounds = np.zeros(n_streams, np.int64)
+        self._dropped_since_round = np.zeros(n_streams, np.int64)
+        self._pending_evictions: list[int] = []
+        # Incremental ready-window counts, updated O(1) on push/commit so a
+        # 1,024-stream step() selects candidates with one vectorised compare
+        # instead of rescanning every ring every round.
+        self._ready_counts = np.zeros(n_streams, np.int64)
         # Ingest hardening: the sanitize policy runs on every push, per-
         # stream counters record what it did (None = trust the transport).
         self.sanitize = sanitize
         self.rejected_chunks = np.zeros(n_streams, np.int64)
         self.zeroed_samples = np.zeros(n_streams, np.int64)
         self.clipped_chunks = np.zeros(n_streams, np.int64)
-        # Fault-injection seam: when set, called as ``fault_hook(ids)`` at
-        # the top of each scoring round, before any state is committed — it
-        # may raise (simulated crash) or advance a fake clock (simulated
-        # stall).  The transactional step() guarantees a raising hook leaves
-        # rings and tracker untouched.  Installed by the fleet supervisor's
-        # fault harness; never set in production serving.
-        self.fault_hook = None
-        # observability counters for the bench / driver
+        # observability counters for the bench / driver (forward_calls,
+        # padded_slots and slot_histogram live on the core, exposed below)
         self.windows_scored = 0
-        self.forward_calls = 0
-        self.padded_slots = 0
         self.rounds = 0  # successfully committed scoring rounds
         self._dropped_samples = 0  # maintained incrementally by push()
+        self.served_windows = np.zeros(n_streams, np.int64)
+        self.deferred_windows = np.zeros(n_streams, np.int64)
+        self.refused_chunks = np.zeros(n_streams, np.int64)
 
     # -- ingest --------------------------------------------------------------
 
     def push(self, stream: int, samples: np.ndarray) -> int:
-        """Append raw audio to one stream; returns samples dropped (overflow)."""
+        """Append raw audio to one stream; returns samples dropped (overflow).
+
+        Admission gate: the first ``admission.max_streams`` *distinct*
+        streams ever pushed are admitted; chunks for later streams — and for
+        streams the engine has evicted — are refused (counted in
+        ``refused_chunks``, returns 0) without touching any ring."""
         if not 0 <= stream < self.n_streams:
             raise ValueError(
                 f"stream index {stream} out of range for an engine with "
                 f"{self.n_streams} stream(s) (valid: 0..{self.n_streams - 1})"
             )
+        if not self._seen[stream]:
+            self._seen[stream] = True
+            self._n_seen += 1
+            max_streams = self.admission.max_streams
+            if max_streams is not None and self._n_seen > max_streams:
+                self._admitted[stream] = False
+        if not self._admitted[stream]:
+            self.refused_chunks[stream] += 1
+            return 0  # refused at admission: nothing reached the ring
         x = np.asarray(samples, np.float32).reshape(-1)
         if self.sanitize is not None:
             x, rep = self.sanitize.apply(x)
@@ -456,22 +525,77 @@ class MonitorEngine:
             if rep.rejected:
                 self.rejected_chunks[stream] += 1
                 return 0  # nothing reached the ring, nothing overflowed
-        dropped = self._rings[stream].push(x)
+        ring = self._rings[stream]
+        dropped = ring.push(x)
         self._dropped_samples += dropped
+        if dropped:
+            self._dropped_since_round[stream] += dropped
+        self._ready_counts[stream] = ring.ready
         return dropped
 
     def ready_windows(self) -> np.ndarray:
-        """Per-stream count of complete, unscored windows."""
-        return np.array([r.ready for r in self._rings], np.int64)
+        """Per-stream count of complete, unscored windows (maintained
+        incrementally on push/commit — no ring scan)."""
+        return self._ready_counts.copy()
 
     @property
     def dropped_samples(self) -> int:
         return self._dropped_samples
 
+    @property
+    def admitted(self) -> np.ndarray:
+        """Per-stream admission mask (False = refused at cap or evicted)."""
+        return self._admitted.copy()
+
+    def take_evictions(self) -> list[int]:
+        """Stream ids evicted since the last call (overflow eviction); the
+        fleet supervisor consumes these to rebuild the worker without the
+        abusive streams via its reassignment machinery."""
+        out, self._pending_evictions = self._pending_evictions, []
+        return out
+
+    # -- core counter shims (the dispatch loop lives in serving/batching) ----
+
+    @property
+    def fault_hook(self):
+        """Fault-injection seam: when set, called with the round's items at
+        the top of each dispatch, before anything is submitted — it may
+        raise (simulated crash) or advance a fake clock (simulated stall).
+        The transactional step() guarantees a raising hook leaves rings and
+        tracker untouched.  Delegates to the shared core's ``pre_dispatch``;
+        installed by the fleet supervisor's fault harness, never set in
+        production serving."""
+        return self._core.pre_dispatch
+
+    @fault_hook.setter
+    def fault_hook(self, hook):
+        self._core.pre_dispatch = hook
+
+    @property
+    def forward_calls(self) -> int:
+        return self._core.blocks_dispatched
+
+    @forward_calls.setter
+    def forward_calls(self, v: int):
+        self._core.blocks_dispatched = int(v)
+
+    @property
+    def padded_slots(self) -> int:
+        return self._core.padded_slots
+
+    @padded_slots.setter
+    def padded_slots(self, v: int):
+        self._core.padded_slots = int(v)
+
+    @property
+    def slot_histogram(self) -> dict[int, int]:
+        """Blocks dispatched per slot shape (adaptive sizing observability)."""
+        return dict(self._core.slot_histogram)
+
     # -- scoring -------------------------------------------------------------
 
     def _submit(self, block: np.ndarray) -> jax.Array:
-        """Dispatch one fixed-slot block; returns the in-flight device buffer
+        """Dispatch one slot block; returns the in-flight device buffer
         (jax dispatch is async — this does not wait for the result)."""
         x = jnp.asarray(block)
         raw = self.on_device_features
@@ -485,47 +609,48 @@ class MonitorEngine:
             self._qp, x, self.cfg, interpret=self._interpret, raw_windows=raw
         )
 
+    def _submit_rows(self, rows, slots: int) -> jax.Array:
+        """DispatchCore submit hook: pack live rows into the next rotation
+        buffer of the chosen slot shape and dispatch it."""
+        return self._submit(self._pool.pack(rows, slots))
+
     def _forward(self, rows: np.ndarray) -> np.ndarray:
         """Micro-batch (n, row_width) inputs — features, or raw windows when
-        the front-end is fused — through fixed-size jit slots.
+        the front-end is fused — through the shared dispatch core: the slot
+        policy picks each block's shape (fixed ``batch_slots``, or the
+        adaptive ladder), blocks come from the preallocated buffer rotation,
+        and up to ``inflight`` blocks overlap on device with harvest-time
+        ``block_until_ready``."""
+        return np.stack(self._core.dispatch(list(rows)))
 
-        Double-buffered: block N+1 is submitted while block N's device
-        buffers are still in flight; the explicit ``block_until_ready`` sits
-        at harvest time, not submit time, so device compute and host-side
-        packing of the next block overlap.  Blocks come from the
-        preallocated ``self._blocks`` rotation (no per-chunk allocation);
-        only a partial chunk's dead-slot tail is re-zeroed, full blocks are
-        overwritten outright.
-        """
-        n = len(rows)
-        probs = np.empty((n, self.cfg.n_classes), np.float32)
-        pending: collections.deque[tuple[int, int, jax.Array]] = collections.deque()
-
-        def harvest():
-            # block_until_ready means the device has consumed the input
-            # block too, so its buffer is safe to rewrite on a later turn.
-            start, n_valid, buf = pending.popleft()
-            out = np.asarray(buf.block_until_ready())
-            probs[start : start + n_valid] = out[:n_valid]
-
-        for start in range(0, n, self.batch_slots):
-            chunk = rows[start : start + self.batch_slots]
-            block = self._blocks[self._block_i]
-            self._block_i = (self._block_i + 1) % len(self._blocks)
-            block[: len(chunk)] = chunk
-            if len(chunk) < self.batch_slots:
-                block[len(chunk):] = 0.0  # dead slots carry silence
-            pending.append((start, len(chunk), self._submit(block)))
-            self.forward_calls += 1
-            self.padded_slots += self.batch_slots - len(chunk)
-            if len(pending) >= self._inflight:
-                harvest()
-        while pending:
-            harvest()
-        return probs
+    def precompile(self) -> tuple[int, ...]:
+        """Trace the jitted forward once per dispatchable slot shape (the
+        policy's ladder) so adaptive serving never hits a compile stall
+        mid-round; returns the ladder."""
+        precompile_slot_shapes(
+            self._qp,
+            self.cfg,
+            self.slot_policy.ladder,
+            row_width=self._in_width,
+            mesh=self._mesh,
+            axis_name=self._mesh_axis,
+            interpret=self._interpret,
+            raw_windows=self.on_device_features,
+        )
+        return self.slot_policy.ladder
 
     def step(self) -> list[WindowScore]:
-        """Score one round: at most one ready window per stream.
+        """Score one round over the admitted backlog.
+
+        With the default :class:`~repro.serving.batching.AdmissionPolicy`
+        this is the classic beat — at most one ready window per stream,
+        every admitted stream served.  ``max_per_stream_per_round`` lets a
+        backlogged stream drain several windows in one round;
+        ``round_budget`` caps the round's total windows, allocated
+        depth-fair (:func:`~repro.serving.batching.fair_allocation`) so a
+        firehose stream can never displace another stream's first window.
+        Windows beyond a stream's allocation stay buffered and are counted
+        in ``deferred_windows``.
 
         Transactional: the round either completes — windows scored, rings
         advanced, tracker updated — or, if the forward raises, leaves every
@@ -534,49 +659,79 @@ class MonitorEngine:
         can simply call ``step()`` again: the same windows are re-scored and
         the per-stream window indices never desync.
 
-        Returns the per-window scores of this round (empty when no stream
-        had a complete window buffered).
+        Returns the per-window scores of this round (empty when no admitted
+        stream had a complete window buffered).
         """
-        ids: list[int] = []
-        wins: list[np.ndarray] = []
-        for s, ring in enumerate(self._rings):
-            w = ring.peek_window()
-            if w is not None:
-                ids.append(s)
-                wins.append(w)
-        if not ids:
+        adm = self.admission
+        cand = np.flatnonzero((self._ready_counts > 0) & self._admitted)
+        if cand.size == 0:
             return []
-        if self.fault_hook is not None:
-            # injection seam (supervisor chaos harness): may raise or stall;
-            # nothing has been committed yet either way
-            self.fault_hook(ids)
-        stacked = np.stack(wins)
+        ready = self._ready_counts[cand]
+        want = np.minimum(ready, adm.max_per_stream_per_round)
+        alloc = fair_allocation(want, adm.round_budget)
+        # Gather stream-major: stream cand[i] contributes alloc[i]
+        # consecutive windows starting at offs[i].
+        offs = np.zeros(cand.size, np.int64)
+        np.cumsum(alloc[:-1], out=offs[1:])
+        wins = [
+            self._rings[s].peek_windows(int(k))
+            for s, k in zip(cand, alloc)
+            if k
+        ]
+        stacked = np.concatenate(wins, axis=0)
         if self.on_device_features:
             rows = stacked  # raw windows; the front-end runs in-graph
         else:
             rows = features.batch_features(stacked, self.feature_kind)
         p_uav = self._forward(rows)[:, 1]  # may raise: nothing committed yet
-        full = np.zeros(self.n_streams, np.float64)
-        mask = np.zeros(self.n_streams, bool)
-        full[ids] = p_uav  # exact float32 -> float64 widening
-        mask[ids] = True
-        state = self.tracker.update(full, mask)
-        # Commit: consume the scored windows only now that the forward and
-        # the tracker round both succeeded.
-        for s in ids:
-            self._rings[s].advance()
-        self.windows_scored += len(ids)
-        self.rounds += 1
-        return [
-            WindowScore(
-                stream=s,
-                window_idx=int(state["idx"][s]),
-                p_uav=float(full[s]),
-                smoothed=float(state["smoothed"][s]),
-                active=bool(state["active"][s]),
+        # Tracker rounds go depth by depth — every served stream's d-th
+        # window lands in one masked vector update — so each stream's
+        # probability sequence reaches its EMA in exactly push order and the
+        # numbers stay bitwise identical to scoring one window per round.
+        out: list[WindowScore] = []
+        for d in range(int(alloc.max())):
+            m = alloc > d
+            sel = cand[m]
+            full = np.zeros(self.n_streams, np.float64)
+            mask = np.zeros(self.n_streams, bool)
+            full[sel] = p_uav[offs[m] + d]  # exact float32 -> float64 widening
+            mask[sel] = True
+            state = self.tracker.update(full, mask)
+            out.extend(
+                WindowScore(
+                    stream=int(s),
+                    window_idx=int(state["idx"][s]),
+                    p_uav=float(full[s]),
+                    smoothed=float(state["smoothed"][s]),
+                    active=bool(state["active"][s]),
+                )
+                for s in sel
             )
-            for s in ids
-        ]
+        # Commit: consume the scored windows only now that the forward and
+        # the tracker rounds all succeeded.
+        for s, k in zip(cand, alloc):
+            for _ in range(int(k)):
+                self._rings[s].advance()
+            self._ready_counts[s] = self._rings[s].ready
+        self.windows_scored += int(alloc.sum())
+        self.rounds += 1
+        self.served_windows[cand] += alloc
+        self.deferred_windows[cand] += ready - alloc
+        # Overflow eviction: a stream whose ring dropped samples in
+        # ``evict_overflow_rounds`` consecutive committed rounds is
+        # de-admitted; the supervisor collects it via take_evictions().
+        overflowed = self._dropped_since_round > 0
+        self._overflow_rounds = np.where(overflowed, self._overflow_rounds + 1, 0)
+        self._dropped_since_round[:] = 0
+        if adm.evict_overflow_rounds is not None:
+            evict = np.flatnonzero(
+                self._admitted
+                & (self._overflow_rounds >= adm.evict_overflow_rounds)
+            )
+            for s in evict:
+                self._admitted[s] = False
+                self._pending_evictions.append(int(s))
+        return out
 
     def drain(self) -> list[WindowScore]:
         """Run rounds until every buffered window has been scored."""
@@ -617,6 +772,13 @@ class MonitorEngine:
                 "rejected_chunks": self.rejected_chunks.copy(),
                 "zeroed_samples": self.zeroed_samples.copy(),
                 "clipped_chunks": self.clipped_chunks.copy(),
+                "served_windows": self.served_windows.copy(),
+                "deferred_windows": self.deferred_windows.copy(),
+                "refused_chunks": self.refused_chunks.copy(),
+                "overflow_rounds": self._overflow_rounds.copy(),
+                "dropped_since_round": self._dropped_since_round.copy(),
+                "admitted": self._admitted.copy(),
+                "seen": self._seen.copy(),
             },
         }
 
@@ -640,3 +802,16 @@ class MonitorEngine:
         self.rejected_chunks = np.asarray(c["rejected_chunks"], np.int64).copy()
         self.zeroed_samples = np.asarray(c["zeroed_samples"], np.int64).copy()
         self.clipped_chunks = np.asarray(c["clipped_chunks"], np.int64).copy()
+        self.served_windows = np.asarray(c["served_windows"], np.int64).copy()
+        self.deferred_windows = np.asarray(c["deferred_windows"], np.int64).copy()
+        self.refused_chunks = np.asarray(c["refused_chunks"], np.int64).copy()
+        self._overflow_rounds = np.asarray(c["overflow_rounds"], np.int64).copy()
+        self._dropped_since_round = np.asarray(
+            c["dropped_since_round"], np.int64
+        ).copy()
+        self._admitted = np.asarray(c["admitted"], bool).copy()
+        self._seen = np.asarray(c["seen"], bool).copy()
+        self._n_seen = int(self._seen.sum())
+        self._pending_evictions = []
+        # ready counts are derived state: recompute from the restored rings
+        self._ready_counts = np.array([r.ready for r in self._rings], np.int64)

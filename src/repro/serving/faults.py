@@ -3,11 +3,17 @@
 A :class:`FaultPlan` is a seeded, JSON-serialisable list of :class:`Fault`
 records, each pinned to an ingest round and a target (a global stream for
 chunk faults, a worker index for worker faults).  The supervisor consults
-the plan at exactly two seams — ``push()`` for chunk faults, the engine's
-``fault_hook`` for worker faults — so a plan replays *identically* on every
+the plan at exactly two seams — ``push()`` for chunk faults, and the shared
+dispatch core's ``pre_dispatch`` hook (exposed as the engine's
+``fault_hook`` property, fired at the top of every
+:class:`~repro.serving.batching.DispatchCore` dispatch before anything is
+submitted) for worker faults — so a plan replays *identically* on every
 run: same seed, same faults, same rounds, same blast radius.  That
 determinism is what lets the chaos tests assert bitwise equality of the
-unaffected streams instead of "mostly worked".
+unaffected streams instead of "mostly worked".  Routing worker faults
+through the core seam means the same harness exercises every server built
+on the core, and the core's all-or-nothing dispatch contract is what makes
+a faulted round cleanly re-runnable.
 
 Fault kinds and their contracts:
 

@@ -87,6 +87,29 @@ def _merge_snapshots(dst: dict, src: dict) -> dict:
     }
 
 
+def _subset_snapshot(snap: dict, keep: list[int]) -> dict:
+    """Project a snapshot onto the ``keep`` local-stream indices (in order):
+    the inverse of :func:`_merge_snapshots`, used when eviction removes
+    streams from a worker.  Per-stream fields are sliced; whole-engine
+    scalar counters are kept as-is (they describe the engine's history,
+    which includes the departed streams)."""
+    tracker = {
+        k: ([snap["tracker"][k][i] for i in keep]
+            if k == "events"
+            else np.asarray(snap["tracker"][k])[keep])
+        for k in snap["tracker"]
+    }
+    counters = {
+        k: (np.asarray(v)[keep] if isinstance(v, np.ndarray) else v)
+        for k, v in snap["counters"].items()
+    }
+    return {
+        "rings": [snap["rings"][i] for i in keep],
+        "tracker": tracker,
+        "counters": counters,
+    }
+
+
 class FleetSupervisor:
     """Health-checked pool of monitor engines with lossless recovery.
 
@@ -157,6 +180,24 @@ class FleetSupervisor:
         # chunk-fault observability (distinct from the engines' sanitize
         # counters: these count what the *transport* did, per global stream)
         self.faulted_chunks = np.zeros(n_streams, np.int64)
+        # Fleet-level admission: ``max_streams`` is a *fleet* cap, so the
+        # first-come gate lives here (workers would otherwise each admit
+        # their first max_streams local streams); the rest of the policy —
+        # per-round fairness budget, overflow eviction — stays per worker
+        # and travels down via engine_kw.  Evicted streams are removed from
+        # their worker outright (the reassignment machinery, in reverse);
+        # pushes to refused or evicted streams are counted and dropped.
+        adm = self._engine_kw.get("admission")
+        self._max_streams = None if adm is None else adm.max_streams
+        if self._max_streams is not None:
+            self._engine_kw["admission"] = dataclasses.replace(
+                adm, max_streams=None
+            )
+        self._seen: set[int] = set()
+        self._refused: set[int] = set()
+        self.evicted: set[int] = set()
+        self.refused_chunks = np.zeros(n_streams, np.int64)
+        self._evicted_events: dict[int, list[TrackEvent]] = {}
 
         groups = np.array_split(np.arange(n_streams), n_workers)
         self.workers = [
@@ -176,12 +217,29 @@ class FleetSupervisor:
     # -- ingest --------------------------------------------------------------
 
     def push(self, stream: int, samples: np.ndarray) -> int:
-        """Route one chunk to its worker (journaled for crash replay)."""
+        """Route one chunk to its worker (journaled for crash replay).
+
+        Chunks for streams refused at the fleet admission cap, or evicted
+        for persistent overflow, are dropped (counted in
+        ``refused_chunks``) — only a stream id the fleet was never built
+        for raises."""
+        if stream in self.evicted or stream in self._refused:
+            self.refused_chunks[stream] += 1
+            return 0
         if stream not in self._route:
             raise ValueError(
                 f"stream index {stream} out of range for a fleet with "
                 f"{self.n_streams} stream(s)"
             )
+        if stream not in self._seen:
+            if (
+                self._max_streams is not None
+                and len(self._seen) >= self._max_streams
+            ):
+                self._refused.add(stream)
+                self.refused_chunks[stream] += 1
+                return 0
+            self._seen.add(stream)
         w_idx, local = self._route[stream]
         w = self.workers[w_idx]
         x = np.asarray(samples, np.float32).reshape(-1)
@@ -269,9 +327,14 @@ class FleetSupervisor:
         w.last_good = w.engine.snapshot()
         w.journal.clear()
         w.last_heartbeat = self._now()
-        return [
+        # map local -> global ids BEFORE eviction renumbers w.streams
+        out = [
             dataclasses.replace(ws, stream=w.streams[ws.stream]) for ws in scored
         ]
+        evictions = w.engine.take_evictions()
+        if evictions:
+            self._evict(w, evictions)
+        return out
 
     def _raise_hook(self):
         def hook(ids):
@@ -340,6 +403,47 @@ class FleetSupervisor:
         w.streams = []
         w.journal.clear()
 
+    def _evict(self, w: _Worker, locals_: list[int]):
+        """Remove persistently-overflowing streams from a worker: the
+        reassignment machinery run in reverse.  The worker is rebuilt from a
+        snapshot projected onto its surviving streams
+        (:func:`_subset_snapshot`) — survivors keep their exact ring
+        contents, EMA trajectories and window indices — while the evicted
+        streams' already-closed track events are stashed for
+        :meth:`finalize` and further pushes to them are refused."""
+        drop = set(locals_)
+        keep = [l for l in range(len(w.streams)) if l not in drop]
+        snap = w.engine.snapshot()
+        evicted_globals = sorted(w.streams[l] for l in drop)
+        for l in drop:
+            g = w.streams[l]
+            self.evicted.add(g)
+            self._evicted_events[g] = list(snap["tracker"]["events"][l])
+            del self._route[g]
+        self._incident(
+            w,
+            "evict",
+            f"streams {evicted_globals} evicted after persistent ring "
+            f"overflow",
+        )
+        if not keep:
+            # every stream evicted: nothing left to serve
+            w.alive = False
+            w.engine = None
+            w.streams = []
+            w.journal.clear()
+            return
+        engine = self._build_engine(len(keep))
+        engine.restore(_subset_snapshot(snap, keep))
+        w.engine = engine
+        w.streams = [w.streams[l] for l in keep]
+        for local, g in enumerate(w.streams):
+            self._route[g] = (w.idx, local)
+        # the projected engine IS the new last-good state; the journal was
+        # cleared by the round that triggered the eviction
+        w.last_good = engine.snapshot()
+        w.journal.clear()
+
     def _incident(self, w: _Worker, kind: str, detail: str):
         self.incidents.append(
             {"round": self.round, "worker": w.idx, "kind": kind,
@@ -363,6 +467,50 @@ class FleetSupervisor:
     @property
     def dropped_samples(self) -> int:
         return sum(w.engine.dropped_samples for w in self.workers if w.alive)
+
+    @property
+    def served_windows(self) -> np.ndarray:
+        """Windows actually scored, per *global* stream (fairness
+        observability; evicted streams keep their final totals at zero
+        growth)."""
+        return self._gather_per_stream("served_windows")
+
+    @property
+    def deferred_windows(self) -> np.ndarray:
+        """Ready windows deferred past their round by the per-stream cap /
+        fairness budget, per global stream."""
+        return self._gather_per_stream("deferred_windows")
+
+    @property
+    def slot_histogram(self) -> dict[int, int]:
+        """Blocks dispatched per slot shape, summed over live workers."""
+        out: dict[int, int] = {}
+        for w in self.workers:
+            if not w.alive:
+                continue
+            for k, v in w.engine.slot_histogram.items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def _gather_per_stream(self, attr: str) -> np.ndarray:
+        out = np.zeros(self.n_streams, np.int64)
+        for w in self.workers:
+            if not w.alive:
+                continue
+            vals = getattr(w.engine, attr)
+            for local, g in enumerate(w.streams):
+                out[g] = vals[local]
+        return out
+
+    def precompile(self) -> tuple[int, ...]:
+        """Warm every worker's jit cache over its slot-shape ladder (one
+        shared cache process-wide, so this is cheap past the first worker);
+        returns the first live worker's ladder."""
+        ladder: tuple[int, ...] = ()
+        for w in self.workers:
+            if w.alive:
+                ladder = w.engine.precompile()
+        return ladder
 
     def health(self) -> list[dict]:
         """Per-worker health: liveness, stream assignment, rebuild count,
@@ -394,8 +542,11 @@ class FleetSupervisor:
             out.extend(scored)
 
     def finalize(self) -> list[list[TrackEvent]]:
-        """Flush still-open tracks; returns per-GLOBAL-stream event lists."""
+        """Flush still-open tracks; returns per-GLOBAL-stream event lists.
+        Evicted streams report the events they had closed before eviction."""
         out: list[list[TrackEvent]] = [[] for _ in range(self.n_streams)]
+        for g, evs in self._evicted_events.items():
+            out[g] = list(evs)
         for w in self.workers:
             if not w.alive:
                 continue

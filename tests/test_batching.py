@@ -1,0 +1,328 @@
+"""The shared continuous-batching core (serving/batching.py) in isolation:
+slot-ladder selection, the rotating block pool's aliasing-safety contract,
+the dispatch loop's ordering/padding/in-flight behaviour and its
+all-or-nothing commit/rollback semantics, and the admission/fairness
+primitives the fleet-scale monitor builds on.  The engine- and server-level
+suites (test_streaming_engine.py, test_serve.py, test_fault_tolerance.py)
+cover the same core through its two production callers.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.batching import (
+    AdmissionPolicy,
+    BlockPool,
+    DispatchCore,
+    SlotPolicy,
+    fair_allocation,
+)
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
+
+
+# ---------------------------------------------------------------------------
+# SlotPolicy
+# ---------------------------------------------------------------------------
+
+
+def test_fixed_policy_always_max():
+    p = SlotPolicy.fixed(8)
+    assert p.ladder == (8,)
+    for backlog in (1, 3, 8, 100):
+        assert p.pick(backlog) == 8
+
+
+def test_adaptive_ladder_powers_of_two():
+    p = SlotPolicy(8, adaptive=True)
+    assert p.ladder == (1, 2, 4, 8)
+    assert p.pick(1) == 1
+    assert p.pick(2) == 2
+    assert p.pick(3) == 2  # largest that fits: 2, then a 1-block follows
+    assert p.pick(7) == 4
+    assert p.pick(8) == 8
+    assert p.pick(1000) == 8
+
+
+def test_adaptive_ladder_respects_min_slots():
+    p = SlotPolicy(16, adaptive=True, min_slots=4)
+    assert p.ladder == (4, 8, 16)
+    # sub-min backlog dispatches the smallest ladder block (bounded padding)
+    assert p.pick(1) == 4
+    assert p.pick(5) == 4
+    assert p.pick(16) == 16
+
+
+def test_adaptive_ladder_multiple_for_shards():
+    p = SlotPolicy(8, adaptive=True, multiple=2)
+    assert p.ladder == (2, 4, 8)
+    assert all(s % 2 == 0 for s in p.ladder)
+    assert p.pick(1) == 2  # never dispatches a shape the mesh can't split
+
+
+def test_slot_policy_validation():
+    with pytest.raises(ValueError, match="max_slots"):
+        SlotPolicy(0)
+    with pytest.raises(ValueError, match="min_slots"):
+        SlotPolicy(4, min_slots=5)
+    with pytest.raises(ValueError, match="multiple"):
+        SlotPolicy(6, multiple=4)
+    with pytest.raises(ValueError, match="backlog"):
+        SlotPolicy(4).pick(0)
+
+
+def test_adaptive_total_padding_bounded_by_ladder():
+    # whatever the backlog, padding only ever occurs on the final sub-min
+    # block, so it is < the smallest ladder value
+    p = SlotPolicy(8, adaptive=True)
+    for backlog in range(1, 40):
+        remaining, padded = backlog, 0
+        while remaining > 0:
+            s = p.pick(remaining)
+            live = min(s, remaining)
+            padded += s - live
+            remaining -= live
+        assert padded == 0  # ladder reaches down to 1: never pads
+
+
+# ---------------------------------------------------------------------------
+# BlockPool
+# ---------------------------------------------------------------------------
+
+
+def test_block_pool_rotation_depth():
+    pool = BlockPool(width=3, inflight=2)
+    rows = [np.full(3, i, np.float32) for i in range(10)]
+    b0 = pool.pack(rows[:2], 4)
+    b1 = pool.pack(rows[2:4], 4)
+    b2 = pool.pack(rows[4:6], 4)
+    # three distinct buffers (inflight + 1), then the rotation reuses b0
+    assert b0 is not b1 and b1 is not b2 and b0 is not b2
+    assert pool.pack(rows[6:8], 4) is b0
+
+
+def test_block_pool_zeroes_dead_tail():
+    pool = BlockPool(width=2, inflight=1)
+    full = pool.pack([np.ones(2, np.float32)] * 3, 3)
+    np.testing.assert_array_equal(full, np.ones((3, 2), np.float32))
+    partial = pool.pack([np.full(2, 7.0, np.float32)], 3)
+    np.testing.assert_array_equal(partial[0], np.full(2, 7.0, np.float32))
+    np.testing.assert_array_equal(partial[1:], np.zeros((2, 2), np.float32))
+
+
+def test_block_pool_shapes_rotate_independently():
+    pool = BlockPool(width=1, inflight=1)
+    a = pool.pack([np.zeros(1, np.float32)], 2)
+    b = pool.pack([np.zeros(1, np.float32)], 4)  # other shape: fresh pool
+    c = pool.pack([np.ones(1, np.float32)], 2)
+    assert a.shape == (2, 1) and b.shape == (4, 1)
+    assert a is not c  # shape-2 rotation advanced, untouched by shape-4
+    with pytest.raises(ValueError, match="do not fit"):
+        pool.pack([np.zeros(1, np.float32)] * 3, 2)
+
+
+# ---------------------------------------------------------------------------
+# DispatchCore
+# ---------------------------------------------------------------------------
+
+
+def _sync_core(slots=4, adaptive=False, **kw):
+    """Core over a synchronous 'program' that records each block."""
+    calls = []
+
+    def submit(live, n_slots):
+        calls.append((list(live), n_slots))
+        return [x * 10 for x in live]
+
+    core = DispatchCore(
+        submit=submit,
+        harvest=None,
+        slot_policy=SlotPolicy(slots, adaptive=adaptive),
+        **kw,
+    )
+    return core, calls
+
+
+def test_dispatch_preserves_input_order_and_chunks():
+    core, calls = _sync_core(slots=4)
+    out = core.dispatch(list(range(10)))
+    assert out == [x * 10 for x in range(10)]
+    assert [n for _, n in calls] == [4, 4, 4]
+    assert core.blocks_dispatched == 3
+    assert core.padded_slots == 2  # final block: 2 live in 4 slots
+    assert core.slot_histogram == {4: 3}
+
+
+def test_dispatch_adaptive_shrinks_tail():
+    core, calls = _sync_core(slots=4, adaptive=True)
+    out = core.dispatch(list(range(7)))
+    assert out == [x * 10 for x in range(7)]
+    assert [n for _, n in calls] == [4, 2, 1]
+    assert core.padded_slots == 0
+    assert core.slot_histogram == {4: 1, 2: 1, 1: 1}
+
+
+def test_async_harvest_bounded_inflight():
+    in_flight = []
+    max_depth = []
+
+    def submit(live, slots):
+        handle = [x + 100 for x in live]
+        in_flight.append(handle)
+        max_depth.append(len(in_flight))
+        return handle
+
+    def harvest(handle):
+        in_flight.remove(handle)
+        return handle
+
+    core = DispatchCore(
+        submit=submit, harvest=harvest,
+        slot_policy=SlotPolicy(2), inflight=2,
+    )
+    out = core.dispatch(list(range(9)))
+    assert out == [x + 100 for x in range(9)]
+    # the pipeline never holds more than `inflight` unharvested blocks
+    assert max(max_depth) == 2
+    assert not in_flight  # everything harvested by the end
+
+
+def test_enqueue_drain_fifo_and_requeue_on_failure():
+    boom = {"armed": True}
+
+    def submit(live, slots):
+        if boom["armed"]:
+            raise RuntimeError("injected")
+        return list(live)
+
+    core = DispatchCore(
+        submit=submit, harvest=None, slot_policy=SlotPolicy(3)
+    )
+    core.enqueue([1, 2, 3, 4])
+    with pytest.raises(RuntimeError, match="injected"):
+        core.drain()
+    # rollback: the items went back to the front of the queue, in order
+    core.enqueue([5])
+    boom["armed"] = False
+    assert core.drain() == [1, 2, 3, 4, 5]
+    assert core.drain() == []  # empty queue: no dispatch
+
+
+def test_pre_dispatch_seam_fires_before_submit_and_rolls_back():
+    events = []
+
+    def pre(items):
+        events.append(("pre", list(items)))
+        raise RuntimeError("injected crash")
+
+    core = DispatchCore(
+        submit=lambda live, n: events.append(("submit", list(live))) or list(live),
+        harvest=None,
+        slot_policy=SlotPolicy(2),
+        pre_dispatch=pre,
+        on_rollback=lambda items: events.append(("rollback", list(items))),
+    )
+    with pytest.raises(RuntimeError, match="injected crash"):
+        core.dispatch([1, 2, 3])
+    assert events == [("pre", [1, 2, 3]), ("rollback", [1, 2, 3])]
+    core.pre_dispatch = None
+    assert core.dispatch([1, 2]) is not None  # seam cleared: dispatch works
+
+
+def test_on_commit_sees_items_and_results():
+    committed = []
+    core = DispatchCore(
+        submit=lambda live, n: [x * 2 for x in live],
+        harvest=None,
+        slot_policy=SlotPolicy(2),
+        on_commit=lambda items, results: committed.append((items, results)),
+    )
+    core.dispatch([1, 2, 3])
+    assert committed == [([1, 2, 3], [2, 4, 6])]
+
+
+def test_mid_stream_failure_rolls_back_without_partial_commit():
+    # a failure on block 2 must not fire on_commit even though block 1
+    # already returned results — all-or-nothing from the caller's view
+    committed, rolled = [], []
+
+    def submit(live, slots):
+        if live[0] >= 2:
+            raise RuntimeError("late failure")
+        return list(live)
+
+    core = DispatchCore(
+        submit=submit, harvest=None, slot_policy=SlotPolicy(2),
+        on_commit=lambda *a: committed.append(a),
+        on_rollback=lambda items: rolled.append(list(items)),
+    )
+    with pytest.raises(RuntimeError, match="late failure"):
+        core.dispatch([0, 1, 2, 3])
+    assert committed == []
+    assert rolled == [[0, 1, 2, 3]]
+
+
+# ---------------------------------------------------------------------------
+# AdmissionPolicy / fair_allocation
+# ---------------------------------------------------------------------------
+
+
+def test_admission_policy_validation():
+    AdmissionPolicy()  # defaults valid
+    with pytest.raises(ValueError, match="max_streams"):
+        AdmissionPolicy(max_streams=0)
+    with pytest.raises(ValueError, match="max_per_stream_per_round"):
+        AdmissionPolicy(max_per_stream_per_round=0)
+    with pytest.raises(ValueError, match="round_budget"):
+        AdmissionPolicy(round_budget=0)
+    with pytest.raises(ValueError, match="evict_overflow_rounds"):
+        AdmissionPolicy(evict_overflow_rounds=0)
+
+
+def test_fair_allocation_passthrough_when_budget_covers():
+    want = np.array([3, 0, 2, 1])
+    np.testing.assert_array_equal(fair_allocation(want, None), want)
+    np.testing.assert_array_equal(fair_allocation(want, 6), want)
+    np.testing.assert_array_equal(fair_allocation(want, 100), want)
+
+
+def test_fair_allocation_depth_fair_under_pressure():
+    # firehose stream 0 wants 10, trickles want 1 each; budget 4 must give
+    # every wanting stream its first window before stream 0's second
+    want = np.array([10, 1, 1, 1])
+    np.testing.assert_array_equal(fair_allocation(want, 4), [1, 1, 1, 1])
+    # one more unit of budget goes to the deepest demand, stream 0
+    np.testing.assert_array_equal(fair_allocation(want, 5), [2, 1, 1, 1])
+
+
+def test_fair_allocation_ties_break_by_index():
+    want = np.array([2, 2, 2])
+    np.testing.assert_array_equal(fair_allocation(want, 4), [2, 1, 1])
+    np.testing.assert_array_equal(fair_allocation(want, 2), [1, 1, 0])
+
+
+def test_fair_allocation_rejects_negative():
+    with pytest.raises(ValueError, match="non-negative"):
+        fair_allocation(np.array([1, -1]), 2)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.lists(st.integers(min_value=0, max_value=9), min_size=1, max_size=12),
+    st.integers(min_value=1, max_value=40),
+)
+def test_fair_allocation_properties(want, budget):
+    want = np.asarray(want, np.int64)
+    alloc = fair_allocation(want, budget)
+    # never over-serves a stream, never exceeds the budget
+    assert (alloc <= want).all() and (alloc >= 0).all()
+    assert alloc.sum() <= budget
+    # work-conserving: either demand is fully met or the budget is spent
+    assert alloc.sum() == min(int(want.sum()), budget)
+    # depth-fairness: a stream only reaches depth d+1 once every stream
+    # wanting depth d got it (up to the index tie-break at the boundary)
+    if (want > 0).any():
+        served = alloc[want > 0]
+        assert served.max() - served.min() <= 1 or served.min() >= 1

@@ -508,3 +508,101 @@ def test_supervisor_health_heartbeat_and_validation(detector):
         FleetSupervisor(qp, cfg, n_streams=2, n_workers=3, **SUP_KW)
     with pytest.raises(ValueError, match="dispatch_deadline_s"):
         FleetSupervisor(qp, cfg, n_streams=2, dispatch_deadline_s=0, **SUP_KW)
+
+
+# ---------------------------------------------------------------------------
+# Stream admission / overflow eviction through the supervisor
+# ---------------------------------------------------------------------------
+
+
+def test_supervisor_evicts_persistently_overflowing_stream(detector):
+    """A stream that overflows its ring in evict_overflow_rounds consecutive
+    rounds is evicted through the supervisor: its worker is rebuilt without
+    it (the reassignment machinery in reverse), further pushes are refused,
+    its closed events survive finalize(), and every surviving stream stays
+    bitwise identical to a monolithic engine that never evicted anyone."""
+    from repro.serving.batching import AdmissionPolicy
+
+    cfg, qp = detector
+    rng = np.random.default_rng(33)
+    n_win = 6
+    audio = _scene_audio(rng, 4, n_win)
+    W = features.N_SAMPLES
+
+    def deliver(engine, r):
+        # stream 0 firehoses 2 windows/round into a 1-window ring (overflows
+        # every round); streams 1-3 are well-behaved
+        engine.push(0, audio[0, : 2 * W])
+        for s in (1, 2, 3):
+            engine.push(s, audio[s, r * W : (r + 1) * W])
+
+    def run(engine):
+        scores = {s: [] for s in range(4)}
+        for r in range(n_win):
+            deliver(engine, r)
+            for ws in engine.step():
+                scores[ws.stream].append(ws.p_uav)
+        return scores
+
+    sup = _fleet(
+        detector, 4, 2, capacity_windows=1,
+        admission=AdmissionPolicy(evict_overflow_rounds=2),
+    )
+    scores = run(sup)
+    events = sup.finalize()
+
+    assert [i["kind"] for i in sup.incidents] == ["evict"]
+    assert "[0]" in sup.incidents[0]["detail"]
+    assert sup.evicted == {0}
+    assert sup.workers[0].streams == [1]  # rebuilt without the firehose
+    assert sup._route[1] == (0, 0) and 0 not in sup._route
+    # pushes after eviction were refused, not raised, and counted
+    assert sup.refused_chunks[0] == n_win - 2
+    assert len(scores[0]) == 2  # only the pre-eviction rounds scored
+
+    mono = MonitorEngine(qp, cfg, n_streams=4, capacity_windows=1, **SUP_KW)
+    ref_scores = run(mono)
+    ref_events = mono.finalize()
+    _assert_streams_bitwise(scores, events, ref_scores, ref_events, (1, 2, 3))
+
+
+def test_supervisor_eviction_can_retire_whole_worker(detector):
+    """Evicting every stream of a worker retires the worker cleanly."""
+    from repro.serving.batching import AdmissionPolicy
+
+    cfg, qp = detector
+    rng = np.random.default_rng(35)
+    W = features.N_SAMPLES
+    sup = _fleet(
+        detector, 2, 2, capacity_windows=1,
+        admission=AdmissionPolicy(evict_overflow_rounds=1),
+    )
+    for _ in range(2):
+        sup.push(0, rng.standard_normal(2 * W).astype(np.float32))
+        sup.push(1, rng.standard_normal(W).astype(np.float32))
+        sup.step()
+    assert sup.evicted == {0}
+    assert not sup.workers[0].alive and sup.workers[0].streams == []
+    # the surviving worker keeps serving
+    sup.push(1, rng.standard_normal(W).astype(np.float32))
+    assert [ws.stream for ws in sup.step()] == [1]
+
+
+def test_fleet_admission_cap_refuses_late_streams(detector):
+    """max_streams is a fleet-level first-come cap: late streams' chunks are
+    refused and counted at the supervisor, never delivered to a worker."""
+    from repro.serving.batching import AdmissionPolicy
+
+    rng = np.random.default_rng(37)
+    W = features.N_SAMPLES
+    sup = _fleet(detector, 4, 2, admission=AdmissionPolicy(max_streams=2))
+    win = lambda: rng.standard_normal(W).astype(np.float32)
+    assert sup.push(0, win()) == 0 and sup.push(3, win()) == 0  # admitted
+    assert sup.push(1, win()) == 0 and sup.push(2, win()) == 0  # refused
+    assert sorted(ws.stream for ws in sup.step()) == [0, 3]
+    np.testing.assert_array_equal(sup.refused_chunks, [0, 1, 1, 0])
+    # refusal is sticky; an unknown stream still raises
+    sup.push(1, win())
+    assert sup.refused_chunks[1] == 2
+    with pytest.raises(ValueError, match="out of range"):
+        sup.push(7, win())

@@ -15,8 +15,14 @@ import pytest
 from repro.data import features
 from repro.models import cnn1d
 from repro.serving.accelerator import accelerator_forward
+from repro.serving.batching import AdmissionPolicy
 from repro.serving.engine import MonitorEngine, StreamRing
 from repro.serving.tracker import track_stream
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from _hypothesis_fallback import given, settings, st
 
 TRACK_KW = dict(ema_alpha=0.7, enter_threshold=0.02, exit_threshold=0.01, min_duration=1)
 
@@ -387,3 +393,226 @@ def test_engine_serves_from_quantized_artifact():
         engine.push(s, rng.standard_normal(2 * features.N_SAMPLES).astype(np.float32))
     assert len(engine.drain()) == 4
     assert qpm.quantize_calls == before  # weights untouched while serving
+
+
+# ---------------------------------------------------------------------------
+# Adaptive slot sizing + admission control (the shared dispatch core)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    st.integers(min_value=0, max_value=10_000),
+    st.sampled_from((2, 4)),
+    st.integers(min_value=1, max_value=3),
+)
+def test_adaptive_slots_bitwise_equal_fixed_any_schedule(
+    seed, batch_slots, n_streams
+):
+    """The elastic-batching property: whatever grow/shrink schedule the
+    adaptive slot policy follows over a random push sequence, every
+    stream's probability sequence and event list are bitwise identical to
+    the fixed-slot engine — per-sample activation scales make each row
+    independent of its co-batch, so block shape is unobservable."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(seed)
+    n_win = int(rng.integers(2, 5))
+    audio = rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+    engines = [
+        MonitorEngine(
+            params, cfg, n_streams=n_streams, feature_kind="zcr",
+            batch_slots=batch_slots, adaptive_slots=adaptive,
+            capacity_windows=n_win + 1, **TRACK_KW,
+        )
+        for adaptive in (False, True)
+    ]
+    scores = [{s: [] for s in range(n_streams)} for _ in engines]
+    total = audio.shape[1]
+    cursors = [0] * n_streams
+    while any(c < total for c in cursors):
+        for s in range(n_streams):
+            # identical uneven delivery to both engines
+            chunk = int(rng.uniform(0.2, 2.3) * features.N_SAMPLES)
+            lo, hi = cursors[s], min(total, cursors[s] + chunk)
+            if lo < hi:
+                for e in engines:
+                    e.push(s, audio[s, lo:hi])
+            cursors[s] = hi
+        for e, sc in zip(engines, scores):
+            for ws in e.step():
+                sc[ws.stream].append(ws.p_uav)
+    for e, sc in zip(engines, scores):
+        for ws in e.drain():
+            sc[ws.stream].append(ws.p_uav)
+    for s in range(n_streams):
+        np.testing.assert_array_equal(
+            np.asarray(scores[0][s], np.float64),
+            np.asarray(scores[1][s], np.float64),
+        )
+    assert engines[0].finalize() == engines[1].finalize()
+    # and the adaptive engine never pads more than the fixed one
+    assert engines[1].padded_slots <= engines[0].padded_slots
+
+
+def test_adaptive_slots_dispatch_smaller_blocks():
+    """1 live stream on an 8-slot engine: fixed pads 7/8 slots per round,
+    adaptive dispatches 1-slot blocks (the headline waste the bench rows
+    show at 1 stream)."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(3)
+    audio = rng.standard_normal(3 * features.N_SAMPLES).astype(np.float32)
+    fixed = MonitorEngine(
+        params, cfg, n_streams=1, feature_kind="zcr", batch_slots=8, **TRACK_KW
+    )
+    adaptive = MonitorEngine(
+        params, cfg, n_streams=1, feature_kind="zcr", batch_slots=8,
+        adaptive_slots=True, **TRACK_KW,
+    )
+    assert adaptive.slot_policy.ladder == (1, 2, 4, 8)
+    assert adaptive.precompile() == (1, 2, 4, 8)
+    for e in (fixed, adaptive):
+        e.push(0, audio)
+        e.drain()
+    assert fixed.padded_slots == 3 * 7
+    assert adaptive.padded_slots == 0
+    assert adaptive.slot_histogram == {1: 3}
+
+
+def test_multi_window_rounds_bitwise_equal_classic_beat():
+    """max_per_stream_per_round > 1 drains a backlog in fewer rounds but
+    must feed each stream's windows to the tracker in the same order —
+    scores and events stay bitwise identical to the one-window beat."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(11)
+    n_streams, n_win = 3, 6
+    audio = rng.standard_normal(
+        (n_streams, n_win * features.N_SAMPLES)
+    ).astype(np.float32)
+    runs = []
+    for adm in (None, AdmissionPolicy(max_per_stream_per_round=4)):
+        engine = MonitorEngine(
+            params, cfg, n_streams=n_streams, feature_kind="zcr",
+            batch_slots=4, capacity_windows=n_win, admission=adm, **TRACK_KW,
+        )
+        for s in range(n_streams):
+            engine.push(s, audio[s])
+        scores = {s: [] for s in range(n_streams)}
+        for ws in engine.drain():
+            scores[ws.stream].append(ws.p_uav)
+        runs.append((scores, engine.finalize(), engine.rounds))
+    (sc_one, ev_one, rounds_one), (sc_multi, ev_multi, rounds_multi) = runs
+    for s in range(n_streams):
+        np.testing.assert_array_equal(
+            np.asarray(sc_one[s], np.float64), np.asarray(sc_multi[s], np.float64)
+        )
+    assert ev_one == ev_multi
+    assert rounds_multi < rounds_one  # the backlog drained in fewer rounds
+
+
+def test_firehose_cannot_starve_trickle_stream():
+    """Depth-fair round budget: a stream with a deep backlog never displaces
+    another stream's first window of the round, so the trickle stream's
+    window is always scored in the round it becomes ready."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(7)
+    adm = AdmissionPolicy(max_per_stream_per_round=4, round_budget=4)
+    engine = MonitorEngine(
+        params, cfg, n_streams=2, feature_kind="zcr", batch_slots=4,
+        capacity_windows=12, admission=adm, **TRACK_KW,
+    )
+    # firehose: 8 windows buffered up front; trickle: one window per round
+    engine.push(0, rng.standard_normal(8 * features.N_SAMPLES).astype(np.float32))
+    for _ in range(2):
+        engine.push(1, rng.standard_normal(features.N_SAMPLES).astype(np.float32))
+        served = {0: 0, 1: 0}
+        for ws in engine.step():
+            served[ws.stream] += 1
+        assert served[1] == 1  # trickle served the round it arrived
+        assert served[0] == 3  # firehose fills the rest of the budget
+    assert engine.deferred_windows[0] > 0
+    assert engine.deferred_windows[1] == 0
+    np.testing.assert_array_equal(engine.served_windows, [6, 2])
+
+
+def test_max_streams_admission_first_come():
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(5)
+    engine = MonitorEngine(
+        params, cfg, n_streams=3, feature_kind="zcr", batch_slots=2,
+        admission=AdmissionPolicy(max_streams=2), **TRACK_KW,
+    )
+    win = lambda: rng.standard_normal(features.N_SAMPLES).astype(np.float32)
+    engine.push(0, win())
+    engine.push(1, win())
+    assert engine.push(2, win()) == 0  # over the cap: refused, not scored
+    assert engine.refused_chunks[2] == 1
+    np.testing.assert_array_equal(engine.admitted, [True, True, False])
+    assert sorted(ws.stream for ws in engine.step()) == [0, 1]
+    # refusal is sticky, and an unknown stream id still raises
+    assert engine.push(2, win()) == 0
+    assert engine.refused_chunks[2] == 2
+    with pytest.raises(ValueError, match="out of range"):
+        engine.push(3, win())
+
+
+def test_engine_evicts_persistently_overflowing_stream():
+    """A stream whose ring overflows in evict_overflow_rounds consecutive
+    committed rounds is de-admitted; a stream that overflows once and
+    recovers is not."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(9)
+    engine = MonitorEngine(
+        params, cfg, n_streams=2, feature_kind="zcr", batch_slots=2,
+        capacity_windows=1,  # capacity == one window: easy to overflow
+        admission=AdmissionPolicy(evict_overflow_rounds=2), **TRACK_KW,
+    )
+    win = lambda k: rng.standard_normal(k * features.N_SAMPLES).astype(np.float32)
+    # round 1: stream 0 overflows (2 windows into capacity 1), stream 1 fine
+    engine.push(0, win(2))
+    engine.push(1, win(1))
+    engine.step()
+    assert engine.take_evictions() == []  # one bad round is not persistent
+    # round 2: stream 0 overflows again -> evicted; stream 1 keeps serving
+    engine.push(0, win(2))
+    engine.push(1, win(1))
+    engine.step()
+    assert engine.take_evictions() == [0]
+    np.testing.assert_array_equal(engine.admitted, [False, True])
+    assert engine.push(0, win(1)) == 0 and engine.refused_chunks[0] == 1
+    engine.push(1, win(1))
+    assert [ws.stream for ws in engine.step()] == [1]
+
+
+def test_ready_windows_incremental_matches_ring_scan():
+    """The incremental ready-count must agree with a full ring scan at
+    every point of an uneven push/step/overflow/restore sequence."""
+    cfg, params = _small_detector()
+    rng = np.random.default_rng(13)
+    engine = MonitorEngine(
+        params, cfg, n_streams=3, feature_kind="zcr", batch_slots=2,
+        capacity_windows=2, **TRACK_KW,
+    )
+
+    def check():
+        np.testing.assert_array_equal(
+            engine.ready_windows(),
+            np.array([r.ready for r in engine._rings], np.int64),
+        )
+
+    check()
+    for _ in range(6):
+        for s in range(3):
+            n = int(rng.uniform(0.2, 2.6) * features.N_SAMPLES)
+            engine.push(s, rng.standard_normal(n).astype(np.float32))
+            check()
+        engine.step()
+        check()
+    snap = engine.snapshot()
+    fresh = MonitorEngine(
+        params, cfg, n_streams=3, feature_kind="zcr", batch_slots=2,
+        capacity_windows=2, **TRACK_KW,
+    )
+    fresh.restore(snap)
+    np.testing.assert_array_equal(fresh.ready_windows(), engine.ready_windows())
