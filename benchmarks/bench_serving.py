@@ -33,7 +33,12 @@ force_host_device_count(N_HOST_DEVICES)
 import jax
 import numpy as np
 
-from benchmarks.common import row, write_json
+from benchmarks.common import (
+    format_percentiles,
+    percentile_fields,
+    row,
+    write_json,
+)
 from repro.core.precision_policy import PrecisionPolicy
 from repro.core.pruning import plan_prune
 from repro.data import features
@@ -79,6 +84,23 @@ BURSTY_WINDOWS = 4
 BURSTY_CAPACITY = 2
 BURSTY_WAVES = 8
 BURSTY_ROUND_BUDGET = 8 * BATCH_SLOTS
+
+# Concurrent-fleet rows: the same fleet supervisor stepped sequentially vs
+# with per-worker execution lanes (threads).  Lanes overlap one worker's
+# host feature extraction with another's device scoring through the
+# dispatch core's in-flight rotation; results stay bitwise identical
+# (pinned by tests/test_lane_fleet.py), so the lane row is a pure
+# wall-clock measurement.  Target: >=1.3x aggregate windows/s at 4 workers
+# on a multi-core host.  The ratio is physically bounded by the host's
+# core count — on a single-core runner (the CI container) there is no
+# second core for the overlapped beat to run on, so the honest expectation
+# there is ~1.0x minus thread overhead; every row records host_cpus so the
+# ratio is read against the hardware that produced it.  Interpret-mode CPU
+# numbers carry a run-to-run noise band of roughly +/-10%: track the
+# ratio column across PRs, not any single row's absolute windows/s.
+FLEET_STREAMS = 16
+FLEET_WORKERS = 4
+FLEET_WINDOWS = 6
 
 
 def _smoke() -> bool:
@@ -148,7 +170,6 @@ def bench_monitor(
         n_win += len(scored)
     dt = time.perf_counter() - t0
     engine.finalize()
-    p50, p95, p99 = np.percentile(np.asarray(round_s) * 1e3, [50, 95, 99])
     return {
         "windows": n_win,
         "windows_per_s": n_win / dt,
@@ -156,13 +177,62 @@ def bench_monitor(
         "forward_calls": engine.forward_calls,
         "padded_slots": engine.padded_slots,
         "rounds": len(round_s),
-        "round_p50_ms": round(float(p50), 3),
-        "round_p95_ms": round(float(p95), 3),
-        "round_p99_ms": round(float(p99), 3),
+        **percentile_fields(round_s),
         "drop_rate": round(engine.dropped_samples / delivered, 6),
         "reject_rate": round(
             float(engine.rejected_chunks.sum()) / pushed_chunks, 6
         ),
+    }
+
+
+def bench_fleet(params, cfg, *, lanes: str | None) -> dict:
+    """One fleet leg (sequential or lane-parallel) over the same delivery
+    schedule: every stream gets a full multi-window scene up front, then
+    rounds drain it one window per stream per beat."""
+    from repro.serving.quantized_params import quantize_params
+    from repro.serving.supervisor import FleetSupervisor
+
+    rng = np.random.default_rng(FLEET_STREAMS)
+    sup = FleetSupervisor(
+        quantize_params(params, cfg, mode="int8"), cfg,
+        n_streams=FLEET_STREAMS,
+        n_workers=FLEET_WORKERS,
+        lanes=lanes,
+        feature_kind=FEATURE,
+        batch_slots=BATCH_SLOTS,
+        sanitize=SanitizePolicy(),
+    )
+    audio = rng.standard_normal(
+        (FLEET_STREAMS, FLEET_WINDOWS * features.N_SAMPLES)
+    ).astype(np.float32)
+
+    # Warmup: one window through every stream so each worker's jit cache is
+    # hot (shapes are shared process-wide, but the first leg pays the trace).
+    for s in range(FLEET_STREAMS):
+        sup.push(s, audio[s, : features.N_SAMPLES])
+    sup.drain()
+
+    round_s: list[float] = []
+    n_win = 0
+    t0 = time.perf_counter()
+    for s in range(FLEET_STREAMS):
+        sup.push(s, audio[s, features.N_SAMPLES:])
+    while True:
+        r0 = time.perf_counter()
+        scored = sup.step()
+        if not scored:
+            break
+        round_s.append(time.perf_counter() - r0)
+        n_win += len(scored)
+    dt = time.perf_counter() - t0
+    sup.finalize()
+    sup.close()
+    return {
+        "windows": n_win,
+        "windows_per_s": n_win / dt,
+        "us_per_window": dt / n_win * 1e6,
+        "rounds": len(round_s),
+        **percentile_fields(round_s),
     }
 
 
@@ -211,7 +281,6 @@ def bench_bursty(n_streams: int, params, cfg) -> dict:
         n_win += len(scored)
     dt = time.perf_counter() - t0
     engine.finalize()
-    p50, p95, p99 = np.percentile(np.asarray(round_s) * 1e3, [50, 95, 99])
     return {
         "windows": n_win,
         "windows_per_s": n_win / dt,
@@ -222,9 +291,7 @@ def bench_bursty(n_streams: int, params, cfg) -> dict:
         "served": int(engine.served_windows.sum()),
         "deferred": int(engine.deferred_windows.sum()),
         "rounds": len(round_s),
-        "round_p50_ms": round(float(p50), 3),
-        "round_p95_ms": round(float(p95), 3),
-        "round_p99_ms": round(float(p99), 3),
+        **percentile_fields(round_s),
         "drop_rate": round(engine.dropped_samples / delivered, 6),
     }
 
@@ -363,8 +430,7 @@ def main():
             f"interpret-mode; adaptive slot ladder (max {BATCH_SLOTS}); "
             f"{a['windows_per_s']:.1f} windows/s aggregate "
             f"({a['windows_per_s'] / r['windows_per_s']:.2f}x vs fixed-slot "
-            f"this run); round latency p50/p95/p99 {a['round_p50_ms']:.1f}/"
-            f"{a['round_p95_ms']:.1f}/{a['round_p99_ms']:.1f} ms over "
+            f"this run); {format_percentiles(a)} over "
             f"{a['rounds']} rounds; {a['forward_calls']} forward calls, "
             f"{a['padded_slots']} padded slots (fixed-slot pads "
             f"{r['padded_slots']}); zcr features, small detector",
@@ -384,8 +450,7 @@ def main():
             f"serving/monitor_{n}streams_x{WINDOWS_PER_STREAM}win",
             f"{r['us_per_window']:.0f}",
             f"interpret-mode; {r['windows_per_s']:.1f} windows/s aggregate; "
-            f"round latency p50/p95/p99 {r['round_p50_ms']:.1f}/"
-            f"{r['round_p95_ms']:.1f}/{r['round_p99_ms']:.1f} ms over "
+            f"{format_percentiles(r)} over "
             f"{r['rounds']} rounds; drop {r['drop_rate']:.1%}, reject "
             f"{r['reject_rate']:.1%}; {r['forward_calls']} forward calls "
             f"({BATCH_SLOTS} slots, {r['padded_slots']} padded); zcr "
@@ -430,6 +495,47 @@ def main():
             reject_rate=r["reject_rate"],
             host_devices=jax.device_count(),
         )
+    # Concurrent-fleet rows (skipped under SMOKE): sequential supervisor vs
+    # per-worker execution lanes, same artifact, same delivery schedule.
+    if not _smoke():
+        n_cpus = os.cpu_count() or 1
+        seq = bench_fleet(params, cfg, lanes=None)
+        lan = bench_fleet(params, cfg, lanes="threads")
+        ratio = lan["windows_per_s"] / seq["windows_per_s"]
+        for leg, r in (("seq", seq), ("lanes", lan)):
+            vs = (
+                f"; {ratio:.2f}x vs sequential fleet this run on a "
+                f"{n_cpus}-cpu host (>=1.3x expected at 4 workers only with "
+                f">=2 cores to overlap on; interpret-mode noise band "
+                f"~+/-10%: track the ratio, not the absolute)"
+                if leg == "lanes"
+                else ""
+            )
+            row(
+                f"serving/fleet_{leg}_{FLEET_WORKERS}workers_"
+                f"{FLEET_STREAMS}streams_x{FLEET_WINDOWS}win",
+                f"{r['us_per_window']:.0f}",
+                f"interpret-mode; fleet supervisor, {FLEET_WORKERS} "
+                f"worker(s), "
+                f"{'thread execution lanes' if leg == 'lanes' else 'sequential step'}"
+                f"; {r['windows_per_s']:.1f} windows/s aggregate{vs}; "
+                f"{format_percentiles(r)} over {r['rounds']} rounds; "
+                f"bitwise identical to the sequential fleet and the "
+                f"monolithic engine (tests/test_lane_fleet.py); zcr "
+                f"features, small detector",
+                windows_per_s=round(r["windows_per_s"], 2),
+                n_streams=FLEET_STREAMS,
+                n_workers=FLEET_WORKERS,
+                lanes=leg == "lanes",
+                batch_slots=BATCH_SLOTS,
+                round_p50_ms=r["round_p50_ms"],
+                round_p95_ms=r["round_p95_ms"],
+                round_p99_ms=r["round_p99_ms"],
+                host_devices=jax.device_count(),
+                host_cpus=n_cpus,
+                **({"lanes_vs_seq": round(ratio, 3)} if leg == "lanes" else {}),
+            )
+
     # Fleet-scale bursty-arrival rows (skipped under SMOKE: ~2k windows of
     # interpret-mode forward each).  Acceptance cares about the latency
     # percentiles of a budgeted scoring beat and a *live* drop-rate column
@@ -446,9 +552,8 @@ def main():
                 f"interpret-mode; bursty arrival over {BURSTY_WAVES} waves "
                 f"({BURSTY_WINDOWS}-window bursts into {BURSTY_CAPACITY}-"
                 f"window rings, round budget {BURSTY_ROUND_BUDGET}); "
-                f"{r['windows_per_s']:.1f} windows/s aggregate; round "
-                f"latency p50/p95/p99 {r['round_p50_ms']:.1f}/"
-                f"{r['round_p95_ms']:.1f}/{r['round_p99_ms']:.1f} ms over "
+                f"{r['windows_per_s']:.1f} windows/s aggregate; "
+                f"{format_percentiles(r)} over "
                 f"{r['rounds']} rounds; drop {r['drop_rate']:.1%} (ring "
                 f"overflow), {r['served']} served / {r['deferred']} "
                 f"deferred window-rounds; {r['forward_calls']} forward "

@@ -7,8 +7,40 @@ import json
 import time
 
 import jax
+import numpy as np
 
 _RECORDS: list[dict] = []
+
+#: the round-latency percentile columns every serving row carries
+PERCENTILE_KEYS = ("round_p50_ms", "round_p95_ms", "round_p99_ms")
+
+
+def percentile_fields(round_s, *, scale: float = 1e3, digits: int = 3) -> dict:
+    """Round-latency percentile columns (p50/p95/p99, milliseconds by
+    default via ``scale``) for a list of per-round durations in seconds.
+
+    Zero recorded rounds — SMOKE runs and very short scenes legitimately
+    score everything in the warmup/drain path — degrade to null fields
+    instead of letting ``np.percentile`` raise on an empty list."""
+    if len(round_s) == 0:
+        return {k: None for k in PERCENTILE_KEYS}
+    p50, p95, p99 = np.percentile(np.asarray(round_s) * scale, [50, 95, 99])
+    return {
+        "round_p50_ms": round(float(p50), digits),
+        "round_p95_ms": round(float(p95), digits),
+        "round_p99_ms": round(float(p99), digits),
+    }
+
+
+def format_percentiles(fields: dict) -> str:
+    """Human summary of :func:`percentile_fields` output for a row's derived
+    string; null-safe (``'round latency n/a (0 rounds)'``)."""
+    if any(fields.get(k) is None for k in PERCENTILE_KEYS):
+        return "round latency n/a (0 rounds)"
+    return (
+        f"round latency p50/p95/p99 {fields['round_p50_ms']:.1f}/"
+        f"{fields['round_p95_ms']:.1f}/{fields['round_p99_ms']:.1f} ms"
+    )
 
 
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:

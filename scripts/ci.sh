@@ -28,6 +28,7 @@ case "${1:-}" in
   --cov)
     if python -c "import pytest_cov" 2>/dev/null; then
       COV=(--cov=repro.serving --cov=repro.serving.batching
+           --cov=repro.serving.controller
            --cov=repro.core.pruning
            --cov=repro.core.precision_policy --cov=repro.data.features_jax
            --cov-report=term-missing --cov-fail-under=85)
@@ -45,7 +46,7 @@ python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} ${COV[@]+"${COV[@]}"}
 # CI loudly, not eat the job timeout.  faulthandler dumps all thread stacks
 # when `timeout` sends SIGINT so the hang site lands in the CI log.
 timeout --signal=INT 300 python -X faulthandler -m pytest -x -q \
-  tests/test_fault_tolerance.py
+  tests/test_fault_tolerance.py tests/test_lane_fleet.py
 
 # Benchmark smoke: smallest shapes only, proves the kernel + serving paths
 # still run end-to-end (does not touch the committed BENCH_*.json files).
@@ -82,3 +83,17 @@ python -m repro.serving.faults --seed 7 --streams 3 --workers 2 \
   --rounds 12 --out "$FAULT_PLAN"
 timeout --signal=INT 300 python -m repro.launch.monitor --seconds 2 \
   --workers 2 --faults "$FAULT_PLAN" --random
+
+# Concurrent-fleet smoke: all four workers' rounds run on named execution
+# lanes with the SLO autoscaler closed over them.  A lane deadlock (a lane
+# waiting on a join that never comes, an ingest-queue lock held across a
+# round) hangs exactly here — the hard cap plus faulthandler turns that
+# into a loud failure with every lane's stack in the log.
+timeout --signal=INT 300 python -X faulthandler -m repro.launch.monitor \
+  --seconds 2 --workers 4 --lanes threads --autoscale --random
+
+# Chaos-on-lanes smoke: replay the same seeded fault plan through the
+# lane-parallel supervisor — crash/stall/kill recovery and stream
+# reassignment must hold when every worker steps on its own thread.
+timeout --signal=INT 300 python -X faulthandler -m repro.launch.monitor \
+  --seconds 2 --workers 2 --lanes threads --faults "$FAULT_PLAN" --random

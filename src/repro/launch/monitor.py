@@ -113,6 +113,18 @@ def main(argv=None):
                     help="inject a deterministic fault plan (written by "
                          "python -m repro.serving.faults) through the fleet "
                          "supervisor; implies --workers 2 unless given")
+    ap.add_argument("--lanes", choices=("threads",), default=None,
+                    help="give each fleet worker a named execution lane "
+                         "(thread) so workers' rounds overlap — host "
+                         "feature extraction for one worker overlaps device "
+                         "scoring for another (bitwise-identical results); "
+                         "implies --workers 2 unless given")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="close the SLO loop: a FleetController watches "
+                         "round latency and defer/drop rates and resizes "
+                         "the fleet (spawn/retire workers, retune admission "
+                         "budgets) against a default target; implies "
+                         "--workers 2 unless given")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--random", action="store_true",
                     help="random-init weights (plumbing smoke, no real detections)")
@@ -169,7 +181,12 @@ def main(argv=None):
         admission = AdmissionPolicy(max_streams=args.max_streams)
         print(f"monitor: admission cap {args.max_streams} stream(s)")
 
-    fleet = args.workers is not None or args.faults is not None
+    fleet = (
+        args.workers is not None
+        or args.faults is not None
+        or args.lanes is not None
+        or args.autoscale
+    )
     if fleet:
         from repro.serving.engine import SanitizePolicy
         from repro.serving.faults import FaultClock, FaultPlan
@@ -194,6 +211,7 @@ def main(argv=None):
             qp, cfg,
             n_streams=args.streams,
             n_workers=n_workers,
+            lanes=args.lanes,
             faults=plan,
             clock=FaultClock() if plan is not None else None,
             sanitize=SanitizePolicy(),
@@ -204,8 +222,11 @@ def main(argv=None):
             adaptive_slots=args.adaptive_slots,
             admission=admission,
         )
+        lane_note = (
+            "" if args.lanes is None else f", {args.lanes} execution lanes"
+        )
         print(f"monitor: fleet supervisor, {n_workers} worker(s) over "
-              f"{args.streams} stream(s)")
+              f"{args.streams} stream(s){lane_note}")
     else:
         engine = MonitorEngine(
             params, cfg,
@@ -220,6 +241,23 @@ def main(argv=None):
             adaptive_slots=args.adaptive_slots,
             admission=admission,
         )
+    controller = None
+    if args.autoscale:
+        from repro.serving.controller import FleetController, SLOTarget
+
+        controller = FleetController(
+            engine,
+            SLOTarget(
+                max_defer_rate=0.25,
+                max_drop_rate=0.05,
+                min_workers=1,
+                max_workers=max(2, args.streams // 2),
+            ),
+            window=8,
+            cooldown_rounds=4,
+        )
+        print("monitor: SLO autoscaler on (defer<=25%, drop<=5%, "
+              f"workers 1..{controller.slo.max_workers})")
     if args.adaptive_slots:
         ladder = engine.precompile()
         print(f"monitor: adaptive slots, pre-jitted ladder {list(ladder)}")
@@ -248,7 +286,10 @@ def main(argv=None):
             if cursors[s] < len(scenes[s]):
                 engine.push(s, scenes[s][cursors[s] : cursors[s] + chunk])
                 cursors[s] += chunk
+        t_round = time.perf_counter()
         show(engine.step())
+        if controller is not None:
+            controller.step((time.perf_counter() - t_round) * 1e3)
     show(engine.drain())  # backlogged windows: delivery outpaces 1/round
     dt = time.perf_counter() - t0
     events = engine.finalize()
@@ -283,6 +324,16 @@ def main(argv=None):
             for i in engine.incidents:
                 print(f"    round {i['round']:3d} worker {i['worker']} "
                       f"[{i['kind']}] {i['detail']}")
+        if controller is not None:
+            print(f"monitor: autoscaler took {len(controller.actions)} "
+                  f"action(s), fleet ended at "
+                  f"{engine.n_live_workers} live worker(s)")
+            for a in controller.actions:
+                m = a["metrics"]
+                print(f"    round {a['round']:3d} [{a['kind']}] "
+                      f"defer={m['defer_rate']:.2f} drop={m['drop_rate']:.2f} "
+                      f"live={m['n_live']}")
+        engine.close()
     for s, (evs, (t_on, t_off)) in enumerate(zip(events, truths)):
         print(f"stream {s}: ground truth UAV at {t_on:.1f}-{t_off:.1f}s, {len(evs)} event(s)")
         for e in evs:

@@ -759,9 +759,16 @@ class MonitorEngine:
         scores and ``TrackEvent`` lists bitwise identical to the engine that
         never died.  Weights are deliberately NOT part of the snapshot — the
         artifact is immutable and shared, so a supervisor rebuilds workers
-        from it and restores only the cheap mutable state."""
+        from it and restores only the cheap mutable state.
+
+        ``pending_evictions`` (streams de-admitted but not yet collected via
+        :meth:`take_evictions`) is part of the snapshot: without it a revive
+        from a snapshot taken between the de-admission and the collection
+        would leave the stream de-admitted but never actually evicted — no
+        event stash, a stale supervisor route, pushes journaled forever."""
         return {
             "rings": [r.state_dict() for r in self._rings],
+            "pending_evictions": [int(s) for s in self._pending_evictions],
             "tracker": self.tracker.state_dict(),
             "counters": {
                 "windows_scored": self.windows_scored,
@@ -812,6 +819,10 @@ class MonitorEngine:
         self._admitted = np.asarray(c["admitted"], bool).copy()
         self._seen = np.asarray(c["seen"], bool).copy()
         self._n_seen = int(self._seen.sum())
-        self._pending_evictions = []
+        # ``.get``: snapshots from before pending evictions were recorded
+        # restore with none pending (their supervisors drained eagerly).
+        self._pending_evictions = [
+            int(s) for s in snap.get("pending_evictions", [])
+        ]
         # ready counts are derived state: recompute from the restored rings
         self._ready_counts = np.array([r.ready for r in self._rings], np.int64)

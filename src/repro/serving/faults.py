@@ -32,6 +32,13 @@ Fault kinds and their contracts:
     The worker's forward raises mid-round (driver bug, device loss).
     Lossless: the transactional round plus snapshot/restore recovery must
     leave every stream bitwise identical to the fault-free run.
+    ``magnitude`` is the number of *consecutive* dispatch attempts that
+    raise (``0``/``1`` = the classic single crash): the supervisor's revive
+    path re-runs the round after rebuilding the worker, and a magnitude of
+    ``k`` makes the first ``k`` attempts — the original round plus ``k - 1``
+    recovery re-runs — fail, modelling a genuinely transient error that
+    outlives one rebuild.  Bounded recovery (``max_rebuilds``) must absorb
+    every value without the fault ever escaping ``step()``.
 ``stall_forward``
     The forward hangs past the dispatch deadline; the watchdog abandons it
     (:class:`StalledForward`).  Detected via the supervisor's deadline
@@ -50,6 +57,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import json
+import threading
 
 import numpy as np
 
@@ -75,18 +83,25 @@ class StalledForward(InjectedFault):
 class FaultClock:
     """Deterministic stand-in for ``time.monotonic`` so stall detection is
     testable: each ``now()`` ticks a fixed amount, and a stalling fault
-    ``advance()``s it past the supervisor's dispatch deadline."""
+    ``advance()``s it past the supervisor's dispatch deadline.
+
+    Lock-protected: with execution lanes every worker thread reads the one
+    shared clock concurrently, and a torn ``+=`` would lose a stall's
+    ``advance`` and misclassify it as a crash."""
 
     def __init__(self, start: float = 0.0, tick: float = 1e-4):
         self._t = float(start)
         self._tick = float(tick)
+        self._lock = threading.Lock()
 
     def now(self) -> float:
-        self._t += self._tick  # time only moves forward
-        return self._t
+        with self._lock:
+            self._t += self._tick  # time only moves forward
+            return self._t
 
     def advance(self, dt: float):
-        self._t += float(dt)
+        with self._lock:
+            self._t += float(dt)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,7 +112,9 @@ class Fault:
     round: int
     stream: int | None = None  # chunk faults: global stream id
     worker: int | None = None  # worker faults: worker index
-    magnitude: float = 0.0  # jitter: split fraction; stall: hang seconds
+    # jitter: split fraction; stall: hang seconds; raise: consecutive
+    # failing dispatch attempts (0/1 = the classic single crash)
+    magnitude: float = 0.0
 
     def __post_init__(self):
         if self.kind not in KINDS:

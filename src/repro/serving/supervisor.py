@@ -11,6 +11,18 @@ bitwise standard, not a tolerance:
   one :class:`~repro.serving.engine.MonitorEngine` per group, all built
   from the *same immutable baked artifact* (weights are never part of any
   recovery path, so rebuilding a worker is cheap and exact);
+* **execution lanes** — with ``lanes="threads"`` every worker gets a named
+  lane thread that runs its engine's ingest→dispatch→harvest beat, so one
+  worker's host feature extraction overlaps another worker's device
+  scoring through the dispatch core's in-flight rotation.  Ingest enters a
+  shared front-of-fleet :class:`~repro.serving.batching.IngestQueue` and
+  is routed to workers through the ``_route`` table at the top of each
+  round on the supervisor thread, so delivery (admission, chunk faults,
+  journaling) is identical to the sequential fleet; fleet-level mutations
+  (eviction, retirement, spawning) are deferred to the supervisor thread
+  at the end of the round.  Per-stream outputs are bitwise equal across
+  {lane-parallel fleet, sequential fleet, monolithic engine} — the lane
+  conformance tests pin all three, with and without fault plans;
 * **health** — each worker carries a heartbeat (clock time of its last
   successful round); a round that overruns ``dispatch_deadline_s`` on the
   supervisor's clock is classified as a *stall* rather than a crash;
@@ -21,33 +33,55 @@ bitwise standard, not a tolerance:
   snapshot), and re-runs the round.  The transactional
   :meth:`~repro.serving.engine.MonitorEngine.step` guarantees the failed
   attempt committed nothing, so the re-run scores the *same* windows —
-  recovery is lossless and bitwise;
+  recovery is lossless and bitwise.  The re-run happens *inside* the same
+  revive/retire loop, so a second consecutive failure (or a transient
+  error during the recovery re-run itself) is absorbed the same way,
+  bounded by ``max_rebuilds`` — ``step()`` never raises on worker faults;
 * **reassignment** — a worker that keeps dying (``rebuilds >
   max_rebuilds``) is retired: its revived per-stream state (ring
   snapshots, tracker arrays, events, counters) is spliced into a surviving
   worker rebuilt for the combined stream set.  The migrated streams keep
   their exact EMA trajectories and window indices, so even a permanently
-  dead worker costs zero samples and zero numeric drift.
+  dead worker costs zero samples and zero numeric drift;
+* **elasticity** — the same snapshot/splice machinery powers deliberate
+  resizing for the SLO loop (:mod:`repro.serving.controller`):
+  :meth:`spawn_worker` splits the most-loaded worker's streams into a new
+  worker, :meth:`retire_worker` folds a worker back into the survivors,
+  and :meth:`retune_admission` swaps the fleet's admission budgets — all
+  bitwise lossless for every stream.
 
 Fault injection (:mod:`repro.serving.faults`) enters through exactly two
 seams — chunk faults in :meth:`push`, worker faults via the engine's
-``fault_hook`` — and is ``None`` in production.  The chaos suite in
-``tests/test_fault_tolerance.py`` drives seeded plans through this class
-and asserts the fleet never crashes and unaffected streams are bitwise
-identical to a fault-free run.
+``fault_hook`` — and is ``None`` in production.  Worker faults are keyed on
+``(round, worker)`` and each worker's beat runs in its own named lane, so a
+plan injects deterministically into the same lane with and without
+concurrency.  The chaos suite in ``tests/test_fault_tolerance.py`` drives
+seeded plans through this class and asserts the fleet never crashes and
+unaffected streams are bitwise identical to a fault-free run.
 """
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 
 import numpy as np
 
 from repro.models.cnn1d import CNNConfig
+from repro.serving.batching import AdmissionPolicy, IngestQueue
 from repro.serving.engine import MonitorEngine, WindowScore
 from repro.serving.faults import FaultPlan, InjectedFault, StalledForward
 from repro.serving.quantized_params import QuantizedParams
 from repro.serving.tracker import TrackEvent
+
+#: engine counters that describe the whole engine's history (scalars), as
+#: opposed to the per-stream arrays; a spawned worker starts these at zero
+#: so fleet-level sums stay conserved across a split.
+_SCALAR_COUNTERS = (
+    "windows_scored", "forward_calls", "padded_slots", "rounds",
+    "dropped_samples",
+)
 
 
 class _Worker:
@@ -62,12 +96,89 @@ class _Worker:
         self.rebuilds = 0
         self.alive = True
         self.last_heartbeat: float | None = None
+        # Deferred fleet-level actions: a lane must never splice streams into
+        # another worker (its lane may be mid-round), so eviction and
+        # retirement are recorded here and applied by the supervisor thread
+        # at the end of the round.
+        self.pending_evict: list[int] = []
+        self.retire_pending = False
+
+
+class _ExecutionLane:
+    """One worker's execution lane: a named daemon thread that runs the
+    worker's round beat when the supervisor signals it, independently of
+    every other lane.  The lane name (``lane-<worker>``) shows up in
+    faulthandler dumps and ties fault injection — keyed on the worker
+    index — to the thread that executes it."""
+
+    def __init__(self, idx: int):
+        self.name = f"lane-{idx}"
+        self._work: queue.SimpleQueue = queue.SimpleQueue()
+        self._done: queue.SimpleQueue = queue.SimpleQueue()
+        self._thread = threading.Thread(
+            target=self._loop, name=self.name, daemon=True
+        )
+        self._thread.start()
+
+    def submit(self, fn, *args) -> None:
+        self._work.put((fn, args))
+
+    def result(self):
+        ok, val = self._done.get()
+        if ok:
+            return val
+        raise val
+
+    def _loop(self):
+        while True:
+            item = self._work.get()
+            if item is None:
+                return
+            fn, args = item
+            try:
+                self._done.put((True, fn(*args)))
+            except BaseException as exc:  # noqa: BLE001 — relayed to caller
+                self._done.put((False, exc))
+
+    def close(self):
+        self._work.put(None)
+        self._thread.join(timeout=5.0)
+
+
+class _LanePool:
+    """The fleet's named execution lanes, one per worker index.  Lanes are
+    created on demand (spawned workers get a fresh lane) and retired lanes
+    simply idle — a lane is only ever driven by the supervisor thread."""
+
+    def __init__(self):
+        self._lanes: dict[int, _ExecutionLane] = {}
+
+    def ensure(self, idx: int) -> None:
+        if idx not in self._lanes:
+            self._lanes[idx] = _ExecutionLane(idx)
+
+    def name(self, idx: int) -> str | None:
+        lane = self._lanes.get(idx)
+        return None if lane is None else lane.name
+
+    def submit(self, idx: int, fn, *args) -> None:
+        self._lanes[idx].submit(fn, *args)
+
+    def result(self, idx: int):
+        return self._lanes[idx].result()
+
+    def close(self):
+        for lane in self._lanes.values():
+            lane.close()
+        self._lanes.clear()
 
 
 def _merge_snapshots(dst: dict, src: dict) -> dict:
     """Splice ``src``'s per-stream state after ``dst``'s: the combined
     snapshot restores into an engine built for the combined stream count.
-    Per-stream fields concatenate; whole-engine counters add."""
+    Per-stream fields concatenate; whole-engine counters add; pending
+    eviction ids (local stream indices) are re-based onto the combined
+    numbering."""
     tracker = {
         k: (dst["tracker"][k] + src["tracker"][k]
             if k == "events"
@@ -80,31 +191,49 @@ def _merge_snapshots(dst: dict, src: dict) -> dict:
         counters[k] = (
             np.concatenate([v, sv]) if isinstance(v, np.ndarray) else v + sv
         )
+    n_dst = len(dst["rings"])
+    pending = list(dst.get("pending_evictions", [])) + [
+        n_dst + int(l) for l in src.get("pending_evictions", [])
+    ]
     return {
         "rings": list(dst["rings"]) + list(src["rings"]),
+        "pending_evictions": pending,
         "tracker": tracker,
         "counters": counters,
     }
 
 
-def _subset_snapshot(snap: dict, keep: list[int]) -> dict:
+def _subset_snapshot(snap: dict, keep: list[int], *, zero_scalars: bool = False) -> dict:
     """Project a snapshot onto the ``keep`` local-stream indices (in order):
     the inverse of :func:`_merge_snapshots`, used when eviction removes
-    streams from a worker.  Per-stream fields are sliced; whole-engine
-    scalar counters are kept as-is (they describe the engine's history,
-    which includes the departed streams)."""
+    streams from a worker and when :meth:`FleetSupervisor.spawn_worker`
+    splits one.  Per-stream fields are sliced; pending eviction ids are
+    remapped (dropped streams' pending evictions vanish with them);
+    whole-engine scalar counters are kept as-is (they describe the engine's
+    history, which includes the departed streams) unless ``zero_scalars``
+    — the spawn path zeroes them on the spun-off half so fleet-level sums
+    stay conserved."""
     tracker = {
         k: ([snap["tracker"][k][i] for i in keep]
             if k == "events"
             else np.asarray(snap["tracker"][k])[keep])
         for k in snap["tracker"]
     }
-    counters = {
-        k: (np.asarray(v)[keep] if isinstance(v, np.ndarray) else v)
-        for k, v in snap["counters"].items()
-    }
+    counters = {}
+    for k, v in snap["counters"].items():
+        if isinstance(v, np.ndarray):
+            counters[k] = np.asarray(v)[keep]
+        else:
+            counters[k] = 0 if (zero_scalars and k in _SCALAR_COUNTERS) else v
+    remap = {int(old): new for new, old in enumerate(keep)}
+    pending = [
+        remap[int(l)]
+        for l in snap.get("pending_evictions", [])
+        if int(l) in remap
+    ]
     return {
         "rings": [snap["rings"][i] for i in keep],
+        "pending_evictions": pending,
         "tracker": tracker,
         "counters": counters,
     }
@@ -122,6 +251,14 @@ class FleetSupervisor:
         rebuilt worker numerically identical to the dead one.
     n_streams / n_workers:
         Global stream count, partitioned contiguously over the workers.
+    lanes:
+        ``None`` (default) steps the workers sequentially on the caller's
+        thread.  ``"threads"`` gives each worker a named execution lane:
+        all live workers' round beats run concurrently (host feature
+        extraction for one overlaps device scoring for another) and
+        :meth:`push` becomes a non-blocking enqueue onto a shared ingest
+        queue drained at the top of each round.  Per-stream results are
+        bitwise identical either way.
     dispatch_deadline_s:
         A worker round that takes longer than this (on ``clock``) is
         classified as a stall in the incident log.
@@ -143,6 +280,7 @@ class FleetSupervisor:
         *,
         n_streams: int,
         n_workers: int = 2,
+        lanes: str | None = None,
         dispatch_deadline_s: float = 30.0,
         max_rebuilds: int = 3,
         clock=None,
@@ -166,6 +304,10 @@ class FleetSupervisor:
             raise ValueError(
                 f"dispatch_deadline_s must be positive, got {dispatch_deadline_s}"
             )
+        if lanes not in (None, "threads"):
+            raise ValueError(
+                f"lanes must be None (sequential) or 'threads', got {lanes!r}"
+            )
         self._qp = artifact
         self.cfg = cfg
         self.n_streams = n_streams
@@ -177,6 +319,7 @@ class FleetSupervisor:
         self.faults = faults
         self.round = 0  # ingest/scoring round counter (fault plans key on it)
         self.incidents: list[dict] = []
+        self._incident_lock = threading.Lock()
         # chunk-fault observability (distinct from the engines' sanitize
         # counters: these count what the *transport* did, per global stream)
         self.faulted_chunks = np.zeros(n_streams, np.int64)
@@ -198,6 +341,10 @@ class FleetSupervisor:
         self.evicted: set[int] = set()
         self.refused_chunks = np.zeros(n_streams, np.int64)
         self._evicted_events: dict[int, list[TrackEvent]] = {}
+        # Final per-stream counter totals of evicted streams, stashed at
+        # eviction time so ``served_windows``/``deferred_windows`` keep
+        # reporting them after the worker is rebuilt without the stream.
+        self._final_counters: dict[int, dict[str, int]] = {}
 
         groups = np.array_split(np.arange(n_streams), n_workers)
         self.workers = [
@@ -208,6 +355,14 @@ class FleetSupervisor:
         for w in self.workers:
             for local, g in enumerate(w.streams):
                 self._route[g] = (w.idx, local)
+        self.lanes = lanes
+        self._lanes: _LanePool | None = None
+        self._ingest: IngestQueue | None = None
+        if lanes == "threads":
+            self._lanes = _LanePool()
+            for w in self.workers:
+                self._lanes.ensure(w.idx)
+            self._ingest = IngestQueue()
 
     def _build_engine(self, n_streams: int) -> MonitorEngine:
         return MonitorEngine(
@@ -222,7 +377,31 @@ class FleetSupervisor:
         Chunks for streams refused at the fleet admission cap, or evicted
         for persistent overflow, are dropped (counted in
         ``refused_chunks``) — only a stream id the fleet was never built
-        for raises."""
+        for raises.
+
+        With execution lanes the push is a non-blocking append onto the
+        shared front-of-fleet ingest queue (safe while a round is in
+        flight); delivery — admission, chunk faults, journaling — happens
+        on the supervisor thread at the top of the next :meth:`step`,
+        through the identical routing path, and the return value is 0
+        (overflow is still visible in ``dropped_samples``)."""
+        if self._ingest is not None:
+            if not 0 <= stream < self.n_streams:
+                raise ValueError(
+                    f"stream index {stream} out of range for a fleet with "
+                    f"{self.n_streams} stream(s)"
+                )
+            # np.array copies: the caller may reuse its chunk buffer before
+            # the queue is drained.
+            self._ingest.append(
+                (stream, np.array(samples, np.float32).reshape(-1))
+            )
+            return 0
+        return self._ingest_one(stream, samples)
+
+    def _ingest_one(self, stream: int, samples: np.ndarray) -> int:
+        """Deliver one chunk: fleet admission, fault injection, journal,
+        worker push.  Runs on the supervisor thread in both lane modes."""
         if stream in self.evicted or stream in self._refused:
             self.refused_chunks[stream] += 1
             return 0
@@ -276,12 +455,35 @@ class FleetSupervisor:
         """Score one fleet round: at most one window per stream, across all
         live workers.  Never raises on worker faults — crashes, stalls and
         kills are caught, logged to :attr:`incidents`, and recovered
-        losslessly before the round completes."""
+        losslessly before the round completes.
+
+        With execution lanes every live worker's beat runs concurrently in
+        its named lane; results are joined in worker order, and deferred
+        fleet-level actions (eviction, retirement) are applied serially on
+        this thread afterwards, so the observable per-stream behaviour is
+        identical to the sequential fleet."""
+        if self._ingest is not None:
+            for stream, samples in self._ingest.drain():
+                self._ingest_one(stream, samples)
+        live = [w for w in self.workers if w.alive]
+        if self._lanes is None:
+            results = [self._step_worker(w) for w in live]
+        else:
+            for w in live:
+                self._lanes.submit(w.idx, self._step_worker, w)
+            results = [self._lanes.result(w.idx) for w in live]
         out: list[WindowScore] = []
-        for w in self.workers:
-            if not w.alive:
-                continue
-            out.extend(self._step_worker(w))
+        for r in results:
+            out.extend(r)
+        # Deferred fleet-level mutations, serialized in worker order: a lane
+        # must never rebuild another worker's engine mid-round.
+        for w in live:
+            if w.alive and w.pending_evict:
+                evictions, w.pending_evict = list(w.pending_evict), []
+                self._evict(w, evictions)
+            if w.alive and w.retire_pending:
+                w.retire_pending = False
+                self._reassign(w)
         self.round += 1
         return out
 
@@ -295,35 +497,48 @@ class FleetSupervisor:
                     w.engine = None
                     self._incident(w, "kill", "worker process died")
                     self._revive(w)
-                    if not w.alive:  # retired into another worker
+                    if w.retire_pending:  # retires into another worker
                         return []
                 elif f.kind == "raise_forward":
-                    hook = self._raise_hook()
+                    hook = self._raise_hook(f.magnitude)
                 elif f.kind == "stall_forward":
                     hook = self._stall_hook(f.magnitude)
 
-        t0 = self._now()
-        w.engine.fault_hook = hook
-        try:
-            scored = w.engine.step()
-        except Exception as exc:  # noqa: BLE001 — the whole point is to survive
-            elapsed = self._now() - t0
-            stalled = elapsed > self.dispatch_deadline_s
-            self._incident(
-                w,
-                "stall" if stalled else "crash",
-                f"{type(exc).__name__}: {exc} (round took {elapsed:.3f}s)",
-            )
-            self._revive(w)
-            if not w.alive:
-                return []
-            # transactional step committed nothing, so the re-run scores the
-            # exact same windows the failed attempt peeked
-            scored = w.engine.step()
-        finally:
-            if w.engine is not None:
-                w.engine.fault_hook = None
+        # The revive/retry loop (never raises on worker faults): each failed
+        # attempt — including a failure during a recovery re-run — is logged,
+        # the worker revived, and the identical round re-scored; the rebuild
+        # counter bounds the loop, tipping a persistently-failing worker into
+        # retirement instead of letting a second consecutive fault escape.
+        while True:
+            t0 = self._now()
+            # re-install on every attempt: the hooks are stateful (a
+            # transient fault raises on its first k attempts, then clears)
+            w.engine.fault_hook = hook
+            try:
+                scored = w.engine.step()
+                break
+            except Exception as exc:  # noqa: BLE001 — the point is to survive
+                elapsed = self._now() - t0
+                stalled = elapsed > self.dispatch_deadline_s
+                self._incident(
+                    w,
+                    "stall" if stalled else "crash",
+                    f"{type(exc).__name__}: {exc} (round took {elapsed:.3f}s)",
+                )
+                self._revive(w)
+                if w.retire_pending:
+                    return []
+                # transactional step committed nothing, so the re-run scores
+                # the exact same windows the failed attempt peeked
+            finally:
+                if w.engine is not None:
+                    w.engine.fault_hook = None
 
+        # Collect evictions BEFORE snapshotting last_good: a snapshot taken
+        # between de-admission and collection would otherwise revive into a
+        # stream that is refused but never evicted (no event stash, stale
+        # route, journal growing forever).
+        evictions = w.engine.take_evictions()
         w.last_good = w.engine.snapshot()
         w.journal.clear()
         w.last_heartbeat = self._now()
@@ -331,21 +546,32 @@ class FleetSupervisor:
         out = [
             dataclasses.replace(ws, stream=w.streams[ws.stream]) for ws in scored
         ]
-        evictions = w.engine.take_evictions()
         if evictions:
-            self._evict(w, evictions)
+            w.pending_evict.extend(evictions)
         return out
 
-    def _raise_hook(self):
+    def _raise_hook(self, magnitude: float = 0.0):
+        # magnitude = consecutive failing attempts (0/1 = classic one crash):
+        # the hook object survives the revive, so the recovery re-run fails
+        # too until the budget is spent — the back-to-back-failure case the
+        # revive/retry loop exists for.
+        state = {"left": max(1, int(magnitude))}
+
         def hook(ids):
-            raise InjectedFault("injected forward crash")
+            if state["left"] > 0:
+                state["left"] -= 1
+                raise InjectedFault("injected forward crash")
 
         return hook
 
     def _stall_hook(self, magnitude: float):
         hang = max(float(magnitude), 2.0 * self.dispatch_deadline_s)
+        state = {"left": 1}  # one hang; the revived worker's re-run proceeds
 
         def hook(ids):
+            if state["left"] <= 0:
+                return
+            state["left"] -= 1
             # simulate the hang on the injectable clock, then fail the way a
             # real watchdog does: abandon the dispatch
             advance = getattr(self._clock_obj, "advance", None)
@@ -360,7 +586,9 @@ class FleetSupervisor:
     def _revive(self, w: _Worker):
         """Rebuild a dead/crashed worker: fresh engine from the baked
         artifact, restore the last-good snapshot, replay the journal.  The
-        result is bitwise the state at the moment of death."""
+        result is bitwise the state at the moment of death.  A worker past
+        its rebuild budget is flagged for retirement — applied on the
+        supervisor thread at the end of the round, never inside a lane."""
         w.rebuilds += 1
         engine = self._build_engine(len(w.streams))
         engine.restore(w.last_good)
@@ -368,12 +596,15 @@ class FleetSupervisor:
             engine.push(local, chunk)
         w.engine = engine
         if w.rebuilds > self.max_rebuilds:
-            self._reassign(w)
+            w.retire_pending = True
 
-    def _reassign(self, w: _Worker):
-        """Retire a worker that keeps dying: migrate its streams — with
-        their full revived state — into the least-loaded survivor, rebuilt
-        for the combined stream set.  Migration is bitwise lossless."""
+    def _reassign(self, w: _Worker, *, kind: str = "reassign",
+                  detail: str | None = None):
+        """Retire a worker: migrate its streams — with their full revived
+        state — into the least-loaded survivor, rebuilt for the combined
+        stream set.  Migration is bitwise lossless.  Used both for workers
+        that keep dying (``kind="reassign"``) and for deliberate scale-down
+        (:meth:`retire_worker`, ``kind="retire"``)."""
         survivors = [o for o in self.workers if o.alive and o is not w]
         if not survivors:
             # nowhere to move the streams: keep limping on rebuilds
@@ -394,9 +625,10 @@ class FleetSupervisor:
         target.journal.clear()
         self._incident(
             w,
-            "reassign",
-            f"retired after {w.rebuilds} rebuilds; streams "
-            f"{migrated} -> worker {target.idx}",
+            kind,
+            detail
+            or f"retired after {w.rebuilds} rebuilds; streams "
+               f"{migrated} -> worker {target.idx}",
         )
         w.alive = False
         w.engine = None
@@ -409,8 +641,9 @@ class FleetSupervisor:
         snapshot projected onto its surviving streams
         (:func:`_subset_snapshot`) — survivors keep their exact ring
         contents, EMA trajectories and window indices — while the evicted
-        streams' already-closed track events are stashed for
-        :meth:`finalize` and further pushes to them are refused."""
+        streams' already-closed track events and final per-stream counter
+        totals are stashed (for :meth:`finalize` and the fleet counter
+        gathers) and further pushes to them are refused."""
         drop = set(locals_)
         keep = [l for l in range(len(w.streams)) if l not in drop]
         snap = w.engine.snapshot()
@@ -419,6 +652,11 @@ class FleetSupervisor:
             g = w.streams[l]
             self.evicted.add(g)
             self._evicted_events[g] = list(snap["tracker"]["events"][l])
+            self._final_counters[g] = {
+                k: int(np.asarray(v)[l])
+                for k, v in snap["counters"].items()
+                if isinstance(v, np.ndarray)
+            }
             del self._route[g]
         self._incident(
             w,
@@ -445,12 +683,102 @@ class FleetSupervisor:
         w.journal.clear()
 
     def _incident(self, w: _Worker, kind: str, detail: str):
-        self.incidents.append(
-            {"round": self.round, "worker": w.idx, "kind": kind,
-             "detail": detail}
+        # lock-protected: lanes report their own incidents concurrently;
+        # within one worker the order stays causal.
+        with self._incident_lock:
+            self.incidents.append(
+                {"round": self.round, "worker": w.idx, "kind": kind,
+                 "detail": detail}
+            )
+
+    # -- elasticity (the SLO controller's actuators) --------------------------
+
+    def spawn_worker(self) -> int | None:
+        """Scale up: split the most-loaded live worker's streams in half and
+        move the tail half — with its full per-stream state, via the same
+        snapshot/splice machinery reassignment uses — into a brand-new
+        worker (and lane).  Bitwise lossless for every stream; whole-engine
+        scalar counters stay with the donor so fleet totals are conserved.
+        Returns the new worker index, or None when no live worker has two
+        streams to split."""
+        donors = [w for w in self.workers if w.alive and len(w.streams) >= 2]
+        if not donors:
+            return None
+        donor = max(donors, key=lambda o: len(o.streams))
+        snap = donor.engine.snapshot()
+        cut = len(donor.streams) // 2  # donor keeps the head half
+        keep, move = list(range(cut)), list(range(cut, len(donor.streams)))
+        moved = [donor.streams[l] for l in move]
+        engine = self._build_engine(len(keep))
+        engine.restore(_subset_snapshot(snap, keep))
+        donor.engine = engine
+        donor.streams = [donor.streams[l] for l in keep]
+        donor.last_good = engine.snapshot()
+        donor.journal.clear()
+        idx = len(self.workers)
+        spawned_engine = self._build_engine(len(move))
+        spawned_engine.restore(_subset_snapshot(snap, move, zero_scalars=True))
+        spawned = _Worker(idx, spawned_engine, moved)
+        spawned.last_heartbeat = self._now()
+        self.workers.append(spawned)
+        for local, g in enumerate(donor.streams):
+            self._route[g] = (donor.idx, local)
+        for local, g in enumerate(moved):
+            self._route[g] = (idx, local)
+        if self._lanes is not None:
+            self._lanes.ensure(idx)
+        self._incident(
+            spawned, "spawn",
+            f"streams {moved} <- worker {donor.idx} (scale-up)",
         )
+        return idx
+
+    def retire_worker(self, idx: int | None = None, *,
+                      reason: str = "scale-down") -> bool:
+        """Scale down: retire one live worker (the least-loaded by default),
+        splicing its streams — with their full state — into a surviving
+        worker.  Bitwise lossless; refuses (returns False) when it is the
+        last live worker."""
+        live = [w for w in self.workers if w.alive]
+        if len(live) < 2:
+            return False
+        w = self.workers[idx] if idx is not None else min(
+            live, key=lambda o: len(o.streams)
+        )
+        if not w.alive:
+            return False
+        streams = list(w.streams)
+        self._reassign(
+            w, kind="retire", detail=f"{reason}: streams {streams} folded "
+            f"into the survivors",
+        )
+        return not w.alive
+
+    def retune_admission(self, admission: AdmissionPolicy) -> None:
+        """Swap the fleet's admission policy in place (the SLO controller's
+        budget actuator).  The fleet-level ``max_streams`` cap updates here;
+        the per-round knobs land on every live worker's engine and on the
+        kwargs future rebuilds use.  Note streams already refused at the old
+        cap stay refused — first-come admission is sticky by design."""
+        self._max_streams = admission.max_streams
+        worker_adm = dataclasses.replace(admission, max_streams=None)
+        self._engine_kw["admission"] = worker_adm
+        for w in self.workers:
+            if w.alive:
+                w.engine.admission = worker_adm
+
+    @property
+    def admission(self) -> AdmissionPolicy:
+        """The currently-active fleet admission policy (fleet-level
+        ``max_streams`` re-folded in)."""
+        adm = self._engine_kw.get("admission") or AdmissionPolicy()
+        return dataclasses.replace(adm, max_streams=self._max_streams)
 
     # -- introspection / lifecycle -------------------------------------------
+
+    @property
+    def n_live_workers(self) -> int:
+        return sum(1 for w in self.workers if w.alive)
 
     @property
     def windows_scored(self) -> int:
@@ -471,14 +799,14 @@ class FleetSupervisor:
     @property
     def served_windows(self) -> np.ndarray:
         """Windows actually scored, per *global* stream (fairness
-        observability; evicted streams keep their final totals at zero
-        growth)."""
+        observability); evicted streams keep their final totals."""
         return self._gather_per_stream("served_windows")
 
     @property
     def deferred_windows(self) -> np.ndarray:
         """Ready windows deferred past their round by the per-stream cap /
-        fairness budget, per global stream."""
+        fairness budget, per global stream; evicted streams keep their
+        final totals."""
         return self._gather_per_stream("deferred_windows")
 
     @property
@@ -500,6 +828,10 @@ class FleetSupervisor:
             vals = getattr(w.engine, attr)
             for local, g in enumerate(w.streams):
                 out[g] = vals[local]
+        # evicted (and retired-with-their-worker) streams report the totals
+        # stashed when they left the fleet, not zeros
+        for g, totals in self._final_counters.items():
+            out[g] = totals.get(attr, 0)
         return out
 
     def precompile(self) -> tuple[int, ...]:
@@ -513,8 +845,8 @@ class FleetSupervisor:
         return ladder
 
     def health(self) -> list[dict]:
-        """Per-worker health: liveness, stream assignment, rebuild count,
-        heartbeat age on the supervisor's clock."""
+        """Per-worker health: liveness, lane, stream assignment, rebuild
+        count, heartbeat age on the supervisor's clock."""
         now = self._now()
         report = []
         for w in self.workers:
@@ -522,6 +854,9 @@ class FleetSupervisor:
                 {
                     "worker": w.idx,
                     "alive": w.alive,
+                    "lane": (
+                        None if self._lanes is None else self._lanes.name(w.idx)
+                    ),
                     "streams": list(w.streams),
                     "rebuilds": w.rebuilds,
                     "heartbeat_age_s": (
@@ -540,6 +875,19 @@ class FleetSupervisor:
             if not scored:
                 return out
             out.extend(scored)
+
+    def close(self) -> None:
+        """Shut down the execution lanes (no-op for the sequential fleet).
+        The supervisor remains usable afterwards only in sequential mode."""
+        if self._lanes is not None:
+            self._lanes.close()
+            self._lanes = None
+            # queued-but-undelivered ingest would be lost with the lanes;
+            # deliver it so close() is not a silent drop
+            if self._ingest is not None:
+                for stream, samples in self._ingest.drain():
+                    self._ingest_one(stream, samples)
+                self._ingest = None
 
     def finalize(self) -> list[list[TrackEvent]]:
         """Flush still-open tracks; returns per-GLOBAL-stream event lists.

@@ -1,0 +1,81 @@
+"""Unit tests for the shared benchmark row-builder helpers.
+
+The serving benches derive their percentile columns through
+:func:`benchmarks.common.percentile_fields`, which must degrade to null
+fields on zero recorded rounds (SMOKE runs score everything in
+warmup/drain) instead of letting ``np.percentile`` raise on an empty
+list.  ``benchmarks.bench_serving`` itself is deliberately NOT imported
+here — it forces a simulated host-device count before jax import, which
+must not leak into the unit-test process.
+"""
+import json
+
+import pytest
+
+from benchmarks import common
+from benchmarks.common import (
+    PERCENTILE_KEYS,
+    format_percentiles,
+    percentile_fields,
+    row,
+    write_json,
+)
+
+
+def test_percentile_fields_empty_rounds_degrade_to_null():
+    fields = percentile_fields([])
+    assert fields == {k: None for k in PERCENTILE_KEYS}
+    assert format_percentiles(fields) == "round latency n/a (0 rounds)"
+
+
+def test_percentile_fields_scale_and_ordering():
+    fields = percentile_fields([0.001, 0.002, 0.010, 0.004])
+    assert set(fields) == set(PERCENTILE_KEYS)
+    p50, p95, p99 = (fields[k] for k in PERCENTILE_KEYS)
+    assert p50 <= p95 <= p99  # percentiles are monotone in q
+    assert p50 == pytest.approx(3.0)  # seconds -> milliseconds
+    assert p99 <= 10.0
+    text = format_percentiles(fields)
+    assert text.startswith("round latency p50/p95/p99 ")
+    assert text.endswith(" ms")
+
+
+def test_percentile_fields_single_round_collapses():
+    fields = percentile_fields([0.005])
+    assert all(fields[k] == 5.0 for k in PERCENTILE_KEYS)
+
+
+def test_format_percentiles_null_safe_on_partial_fields():
+    fields = percentile_fields([0.001])
+    fields["round_p99_ms"] = None
+    assert format_percentiles(fields) == "round latency n/a (0 rounds)"
+
+
+def test_row_records_non_numeric_median_as_null(capsys):
+    before = len(common._RECORDS)
+    row("kernels/unit_test_na", "n/a", "derived text", extra_key=7)
+    rec = common._RECORDS[-1]
+    try:
+        assert rec["median_us"] is None
+        assert rec["extra_key"] == 7
+        assert capsys.readouterr().out.strip() == (
+            "kernels/unit_test_na,n/a,derived text"
+        )
+    finally:
+        del common._RECORDS[before:]  # keep the module-global sink clean
+
+
+def test_write_json_filters_by_prefix(tmp_path):
+    before = len(common._RECORDS)
+    row("serving/unit_a", 12.3456, "a")
+    row("kernels/unit_b", 1.0, "b")
+    try:
+        path = tmp_path / "BENCH_unit.json"
+        write_json(str(path), prefix="serving/")
+        data = json.loads(path.read_text())
+        assert "serving/unit_a" in data
+        assert "kernels/unit_b" not in data
+        assert data["serving/unit_a"]["median_us"] == 12.346  # rounded
+        assert data["serving/unit_a"]["derived"] == "a"
+    finally:
+        del common._RECORDS[before:]

@@ -162,6 +162,68 @@ def test_engine_restore_validates_stream_count(detector):
         e2.restore(e3.snapshot())
 
 
+def _assert_snapshots_equal(a: dict, b: dict):
+    """Deep bitwise equality over EVERY snapshot field — rings, tracker
+    arrays and events, all counters, pending evictions."""
+    assert a.keys() == b.keys()
+    assert a["pending_evictions"] == b["pending_evictions"]
+    assert len(a["rings"]) == len(b["rings"])
+    for ra, rb in zip(a["rings"], b["rings"]):
+        assert ra.keys() == rb.keys()
+        for k in ra:
+            np.testing.assert_array_equal(ra[k], rb[k], err_msg=f"rings.{k}")
+    for part in ("tracker", "counters"):
+        assert a[part].keys() == b[part].keys()
+        for k in a[part]:
+            if k == "events":
+                assert a[part][k] == b[part][k]
+            else:
+                np.testing.assert_array_equal(
+                    a[part][k], b[part][k], err_msg=f"{part}.{k}"
+                )
+
+
+def test_engine_snapshot_restore_roundtrips_every_field(detector):
+    """Regression (the pending-evictions snapshot bug): ``snapshot()``
+    omitted ``_pending_evictions`` and ``restore()`` reset it to ``[]``, so
+    a revive from a snapshot taken between a stream's de-admission and the
+    supervisor's ``take_evictions()`` left the stream de-admitted but never
+    evicted.  The conformance is now total: a restored engine's snapshot
+    deep-equals the original over every field, including a live pending
+    eviction, which the revived engine still hands to its supervisor."""
+    from repro.serving.batching import AdmissionPolicy
+
+    cfg, qp = detector
+    rng = np.random.default_rng(41)
+    W = features.N_SAMPLES
+    kw = dict(
+        feature_kind="zcr", batch_slots=2, capacity_windows=1,
+        sanitize=SanitizePolicy(nonfinite="reject"),
+        admission=AdmissionPolicy(evict_overflow_rounds=1), **TRACK_KW,
+    )
+    engine = MonitorEngine(qp, cfg, n_streams=2, **kw)
+    engine.push(0, rng.standard_normal(2 * W).astype(np.float32))  # overflow
+    engine.push(1, rng.standard_normal(W).astype(np.float32))
+    engine.step()  # stream 0 de-admitted, eviction pending, NOT collected
+
+    snap = engine.snapshot()
+    assert snap["pending_evictions"] == [0]  # the field the bug dropped
+
+    revived = MonitorEngine(qp, cfg, n_streams=2, **kw)
+    revived.restore(snap)
+    _assert_snapshots_equal(revived.snapshot(), snap)
+    # the revived engine still surfaces the eviction to its supervisor
+    assert revived.take_evictions() == [0]
+    assert engine.take_evictions() == [0]
+
+    # drained state round-trips too (pending_evictions now empty)
+    snap2 = engine.snapshot()
+    assert snap2["pending_evictions"] == []
+    again = MonitorEngine(qp, cfg, n_streams=2, **kw)
+    again.restore(snap2)
+    _assert_snapshots_equal(again.snapshot(), snap2)
+
+
 def test_ring_state_dict_validates_geometry():
     sd = StreamRing(window=10, hop=5, capacity_windows=2).state_dict()
     with pytest.raises(ValueError, match="hop"):
@@ -420,6 +482,46 @@ def test_worker_crash_stall_kill_are_lossless(detector, fleet_scene):
     assert all(w.alive for w in sup.workers)
 
 
+def test_back_to_back_worker_failures_never_escape_step(detector, fleet_scene):
+    """Regression (the post-revive retry bug): a transient fault whose
+    magnitude makes the recovery re-run fail *again* — back-to-back
+    failures inside one round — must be absorbed by the same revive path,
+    not escape ``step()``.  Before the fix the retry ran outside the
+    try/except, so the second consecutive raise crashed the supervisor."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    plan = FaultPlan([
+        # first attempt AND the recovery re-run both raise; third succeeds
+        Fault("raise_forward", round=1, worker=0, magnitude=2),
+    ])
+    sup = _fleet(detector, 4, 2, faults=plan)
+    scores = _drive(sup, audio, schedule)  # the bug made this raise
+    events = sup.finalize()
+    _assert_streams_bitwise(scores, events, ref_scores, ref_events, range(4))
+    assert [i["kind"] for i in sup.incidents] == ["crash", "crash"]
+    assert [i["round"] for i in sup.incidents] == [1, 1]
+    assert sup.workers[0].rebuilds == 2
+    assert all(w.alive for w in sup.workers)
+
+
+def test_transient_fault_outliving_rebuild_budget_retires_losslessly(
+        detector, fleet_scene):
+    """The bounded end of the retry loop: a fault that outlives
+    ``max_rebuilds`` consecutive re-runs tips the worker into retirement —
+    its streams migrate to the survivor mid-scene with zero loss and the
+    fault still never escapes ``step()``."""
+    audio, schedule, ref_scores, ref_events = fleet_scene
+    plan = FaultPlan([
+        Fault("raise_forward", round=1, worker=0, magnitude=5),
+    ])
+    sup = _fleet(detector, 4, 2, max_rebuilds=1, faults=plan)
+    scores = _drive(sup, audio, schedule)
+    events = sup.finalize()
+    _assert_streams_bitwise(scores, events, ref_scores, ref_events, range(4))
+    assert [i["kind"] for i in sup.incidents] == ["crash", "crash", "reassign"]
+    assert not sup.workers[0].alive
+    assert sup.workers[1].streams == [2, 3, 0, 1]
+
+
 def test_reassignment_after_repeated_kills_is_lossless(detector, fleet_scene):
     """A worker that dies more than max_rebuilds times is retired and its
     streams migrate — with their full state — to the survivor.  The merged
@@ -586,6 +688,62 @@ def test_supervisor_eviction_can_retire_whole_worker(detector):
     # the surviving worker keeps serving
     sup.push(1, rng.standard_normal(W).astype(np.float32))
     assert [ws.stream for ws in sup.step()] == [1]
+
+
+def test_evicted_streams_keep_final_counter_totals(detector):
+    """Regression (the per-stream gather bug): ``served_windows`` /
+    ``deferred_windows`` promised that evicted streams keep their final
+    totals, but the gather only read live workers' current streams — an
+    evicted stream silently reported 0.  The totals are now stashed at
+    eviction (like the event lists) and folded into the gather, matching a
+    monolithic engine that de-admitted the same stream."""
+    from repro.serving.batching import AdmissionPolicy
+
+    cfg, qp = detector
+    rng = np.random.default_rng(34)
+    n_win = 6
+    audio = _scene_audio(rng, 4, n_win)
+    W = features.N_SAMPLES
+
+    def run(engine):
+        for r in range(n_win):
+            engine.push(0, audio[0, : 2 * W])  # overflows every round
+            for s in (1, 2, 3):
+                engine.push(s, audio[s, r * W : (r + 1) * W])
+            engine.step()
+
+    kw = dict(capacity_windows=1,
+              admission=AdmissionPolicy(evict_overflow_rounds=2))
+    sup = _fleet(detector, 4, 2, **kw)
+    run(sup)
+    assert sup.evicted == {0}
+    mono = MonitorEngine(qp, cfg, n_streams=4, **kw, **SUP_KW)
+    run(mono)
+    # the evicted stream's pre-eviction totals survive (the bug zeroed them)
+    assert sup.served_windows[0] == mono.served_windows[0] > 0
+    np.testing.assert_array_equal(sup.served_windows, mono.served_windows)
+    np.testing.assert_array_equal(sup.deferred_windows, mono.deferred_windows)
+
+
+def test_whole_worker_retirement_keeps_stream_totals(detector):
+    """The same gather contract across whole-worker death: evicting a
+    worker's last stream retires the worker, and the dead worker's streams
+    still report their final served totals."""
+    from repro.serving.batching import AdmissionPolicy
+
+    rng = np.random.default_rng(36)
+    W = features.N_SAMPLES
+    sup = _fleet(
+        detector, 2, 2, capacity_windows=1,
+        admission=AdmissionPolicy(evict_overflow_rounds=1),
+    )
+    for _ in range(2):
+        sup.push(0, rng.standard_normal(2 * W).astype(np.float32))
+        sup.push(1, rng.standard_normal(W).astype(np.float32))
+        sup.step()
+    assert not sup.workers[0].alive  # stream 0 was its only stream
+    assert sup.served_windows[0] == 1  # the pre-eviction round still counts
+    assert sup.served_windows[1] == 2
 
 
 def test_fleet_admission_cap_refuses_late_streams(detector):
