@@ -1,0 +1,107 @@
+"""Pinned benchmark environment, applied *before the first jax import*.
+
+Perf rows are only comparable across PRs if the process environment that
+produced them is pinned — the olmax run.sh idiom (SNIPPETS.md): force the
+host platform device count so XLA's thread pools are carved identically on
+every run, place the step marker at the outer loop, silence the TF log spam
+that skews short timings, and record whether tcmalloc is preloaded (the
+single biggest allocator effect on numpy-heavy benches).
+
+Usage, at the very top of a bench module (before anything imports jax)::
+
+    from benchmarks import bench_env
+    bench_env.apply()
+
+``fingerprint()`` (callable any time after jax is importable) returns the
+environment dict; ``fingerprint_id()`` is its short stable hash, attached to
+every bench row via ``benchmarks.common.set_env_fingerprint`` so a JSON row
+always names the environment that produced it.
+"""
+from __future__ import annotations
+
+import glob
+import hashlib
+import json
+import os
+import platform
+import sys
+
+#: XLA flag pinned on TPU hosts only (merged into any caller-set flags).
+#: 0 = program entry, 1 = outermost while loop — the olmax placement.  The
+#: CPU build of XLA does not compile this flag in and hard-aborts on it at
+#: import (measured), so it is applied exactly when TPU hardware is present;
+#: the fingerprint records which way it went.
+STEP_MARKER_FLAG = "--xla_step_marker_location=1"
+
+_state: dict = {
+    "applied": False,
+    "late": False,
+    "host_devices": None,
+    "step_marker": False,
+}
+
+
+def _tpu_hardware_present() -> bool:
+    """A TPU VM exposes its accelerators as /dev/accel* (libtpu merely being
+    pip-installed — as in this CPU container — does not count)."""
+    return bool(glob.glob("/dev/accel*"))
+
+
+def apply(host_devices: int = 1) -> dict:
+    """Pin the bench environment.  Must run before the first jax import —
+    a late call is recorded in the fingerprint (the rows will say so)
+    rather than silently measuring an unpinned process."""
+    _state["late"] = "jax" in sys.modules
+    _state["host_devices"] = host_devices
+    flags = [f"--xla_force_host_platform_device_count={host_devices}"]
+    if _tpu_hardware_present():
+        _state["step_marker"] = True
+        flags.append(STEP_MARKER_FLAG)
+    existing = os.environ.get("XLA_FLAGS", "")
+    merged = existing.split() if existing else []
+    for f in flags:
+        key = f.split("=")[0]
+        if not any(m.startswith(key) for m in merged):
+            merged.append(f)
+    os.environ["XLA_FLAGS"] = " ".join(merged)
+    os.environ.setdefault("TF_CPP_MIN_LOG_LEVEL", "4")  # no dataset warnings
+    _state["applied"] = True
+    return dict(_state)
+
+
+def tcmalloc_loaded() -> bool:
+    """The olmax runs LD_PRELOAD libtcmalloc; detect either the preload
+    request or the library actually mapped into this process."""
+    if "tcmalloc" in os.environ.get("LD_PRELOAD", ""):
+        return True
+    try:
+        with open("/proc/self/maps") as f:
+            return "tcmalloc" in f.read()
+    except OSError:  # non-Linux host
+        return False
+
+
+def fingerprint() -> dict:
+    """The machine-readable bench environment.  Imports jax (fine by now:
+    ``apply()`` already ran, or ``late`` records that it did not)."""
+    import jax
+
+    return {
+        "applied": _state["applied"],
+        "late": _state["late"],
+        "host_devices": _state["host_devices"],
+        "step_marker": _state["step_marker"],
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "tcmalloc": tcmalloc_loaded(),
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax": jax.__version__,
+        "python": platform.python_version(),
+        "machine": platform.machine(),
+    }
+
+
+def fingerprint_id() -> str:
+    """Short stable digest of :func:`fingerprint` — the per-row field."""
+    blob = json.dumps(fingerprint(), sort_keys=True).encode()
+    return hashlib.sha256(blob).hexdigest()[:10]

@@ -3,16 +3,31 @@ machine-readable JSON sink (``BENCH_kernels.json``) so the perf trajectory
 is diffable across PRs."""
 from __future__ import annotations
 
+import csv
 import json
+import statistics
+import sys
 import time
+from pathlib import Path
 
 import jax
 import numpy as np
 
 _RECORDS: list[dict] = []
 
+#: short env digest attached to every row once a bench registers it
+#: (see ``benchmarks.bench_env``); None = row produced outside a pinned env
+_ENV_FINGERPRINT: str | None = None
+
 #: the round-latency percentile columns every serving row carries
 PERCENTILE_KEYS = ("round_p50_ms", "round_p95_ms", "round_p99_ms")
+
+
+def set_env_fingerprint(fp: str | None) -> None:
+    """Register the pinned-environment digest; every subsequent ``row``
+    carries it as the ``env_fingerprint`` field."""
+    global _ENV_FINGERPRINT
+    _ENV_FINGERPRINT = fp
 
 
 def percentile_fields(round_s, *, scale: float = 1e3, digits: int = 3) -> dict:
@@ -43,6 +58,14 @@ def format_percentiles(fields: dict) -> str:
     )
 
 
+def median_us(times_s) -> float:
+    """True median (``statistics.median``) of per-call seconds, in
+    microseconds: for an even sample count this is the mean of the two
+    middle samples — the old ``times[len(times)//2]`` index pick silently
+    returned the upper-mid element instead."""
+    return statistics.median(times_s) * 1e6
+
+
 def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
     """Median wall-time per call in microseconds (blocks on results)."""
     for _ in range(warmup):
@@ -52,29 +75,47 @@ def time_call(fn, *args, warmup: int = 2, iters: int = 5) -> float:
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
         times.append(time.perf_counter() - t0)
-    times.sort()
-    return times[len(times) // 2] * 1e6
+    return median_us(times)
 
 
 def row(name: str, us_per_call: float | str, derived: str, **extra):
     """Emit one CSV row and record it for the JSON sink.  ``extra`` keys
-    (e.g. ``speedup_vs``) land verbatim in the JSON record."""
-    print(f"{name},{us_per_call},{derived}")
+    (e.g. ``speedup_vs``) land verbatim in the JSON record.
+
+    The CSV goes through the ``csv`` module with minimal quoting: ``derived``
+    strings routinely contain commas ("drop 0.0%, reject 0.0%") and a bare
+    f-string print made those rows unparseable."""
+    writer = csv.writer(sys.stdout, quoting=csv.QUOTE_MINIMAL, lineterminator="\n")
+    writer.writerow([name, us_per_call, derived])
     rec: dict = {"derived": derived, **extra}
     try:
         rec["median_us"] = round(float(us_per_call), 3)
     except (TypeError, ValueError):
         rec["median_us"] = None
+    if _ENV_FINGERPRINT is not None and "env_fingerprint" not in rec:
+        rec["env_fingerprint"] = _ENV_FINGERPRINT
     _RECORDS.append({"name": name, **rec})
 
 
-def write_json(path: str = "BENCH_kernels.json", prefix: str = "kernels/") -> str:
-    """Persist every recorded row whose name starts with ``prefix``."""
-    data = {
-        r["name"]: {k: v for k, v in r.items() if k != "name"}
-        for r in _RECORDS
-        if r["name"].startswith(prefix)
-    }
+def write_json(
+    path: str = "BENCH_kernels.json", prefix: str = "kernels/", merge: bool = False
+) -> str:
+    """Persist every recorded row whose name starts with ``prefix``.
+
+    ``merge=True`` updates an existing JSON in place (rows not re-measured
+    this run survive) — this is how the committed baseline carries both the
+    full-shape rows and the SMOKE rows the CI perf gate compares against."""
+    data: dict = {}
+    if merge and Path(path).exists():
+        text = Path(path).read_text()
+        data = json.loads(text) if text.strip() else {}  # mktemp'd file is empty
+    data.update(
+        {
+            r["name"]: {k: v for k, v in r.items() if k != "name"}
+            for r in _RECORDS
+            if r["name"].startswith(prefix)
+        }
+    )
     with open(path, "w") as f:
         json.dump(data, f, indent=2, sort_keys=True)
         f.write("\n")

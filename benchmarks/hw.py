@@ -1,0 +1,47 @@
+"""Single source of truth for the TPU v5e hardware constants every bench
+row's roofline expectation is derived from.
+
+These numbers used to live twice — as module constants in
+``benchmarks/roofline.py`` and hand-inlined into ``bench_kernels``'s
+``derived`` strings — which is exactly how roofline claims drift: edit one
+copy, the other keeps reporting the stale figure.  Everything that quotes a
+peak now imports it from here, and the bench rows carry the derived
+``roofline_us`` / ``roofline_frac`` values as machine-readable fields the
+perf gate and future PRs can diff.
+"""
+from __future__ import annotations
+
+#: TPU v5e, per chip
+V5E_PEAK_BF16_FLOPS = 197e12  # bf16 matmul peak, FLOP/s
+V5E_PEAK_INT8_OPS = 394e12  # int8 matmul peak, OP/s (2x bf16)
+V5E_PEAK_HBM_BPS = 819e9  # HBM bandwidth, B/s
+V5E_PEAK_ICI_BPS = 50e9  # per-link ICI bandwidth, B/s
+
+#: compute peak per operand dtype — int8 kernels are judged against the
+#: doubled MXU rate, float kernels against the bf16 rate.
+PEAK_OPS_BY_DTYPE = {
+    "int8": V5E_PEAK_INT8_OPS,
+    "fxp8": V5E_PEAK_INT8_OPS,
+    "bf16": V5E_PEAK_BF16_FLOPS,
+    "fp32": V5E_PEAK_BF16_FLOPS,  # fp32 streams through the bf16 MXU path
+}
+
+
+def compute_roofline_us(flops: float, dtype: str = "int8") -> float:
+    """Compute-bound roofline latency (microseconds) for ``flops`` total
+    operations at the dtype's MXU peak."""
+    return flops / PEAK_OPS_BY_DTYPE[dtype] * 1e6
+
+
+def hbm_roofline_us(n_bytes: float) -> float:
+    """Memory-bound roofline latency (microseconds) for ``n_bytes`` of HBM
+    traffic at peak bandwidth."""
+    return n_bytes / V5E_PEAK_HBM_BPS * 1e6
+
+
+def roofline_frac(roofline_us: float, measured_us: float) -> float | None:
+    """Fraction of the roofline actually achieved (1.0 = at the roofline;
+    interpret-mode rows score far below it, and say so machine-readably)."""
+    if not measured_us or measured_us <= 0:
+        return None
+    return roofline_us / measured_us

@@ -1,8 +1,10 @@
 """Roofline assembly: dry-run artifacts -> per-cell compute/memory/collective
 terms, dominant bottleneck, and MODEL_FLOPS utilisation ratio.
 
-Hardware constants (TPU v5e per chip): 197 TFLOP/s bf16 (394 TOP/s int8),
-819 GB/s HBM, ~50 GB/s/link ICI.
+Hardware constants (TPU v5e per chip: 197 TFLOP/s bf16, 394 TOP/s int8,
+819 GB/s HBM, ~50 GB/s/link ICI) come from ``benchmarks.hw`` — the one
+shared module ``bench_kernels`` also derives its ``roofline_us`` row fields
+from, so the two can never drift apart again.
 
 Conventions (documented in EXPERIMENTS.md):
 * FLOPs/bytes come from the *cost* variant (fully unrolled — nothing hidden
@@ -21,12 +23,13 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+from benchmarks.hw import (
+    V5E_PEAK_BF16_FLOPS as PEAK_FLOPS,
+    V5E_PEAK_HBM_BPS as PEAK_HBM,
+    V5E_PEAK_ICI_BPS as PEAK_ICI,
+)
 from repro.configs import get_config
 from repro.launch.specs import SHAPES
-
-PEAK_FLOPS = 197e12
-PEAK_HBM = 819e9
-PEAK_ICI = 50e9
 CHIPS = {"pod_16x16": 256, "multipod_2x16x16": 512}
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"

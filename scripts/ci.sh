@@ -31,6 +31,7 @@ case "${1:-}" in
            --cov=repro.serving.controller
            --cov=repro.core.pruning
            --cov=repro.core.precision_policy --cov=repro.data.features_jax
+           --cov=repro.kernels.tiling
            --cov-report=term-missing --cov-fail-under=85)
     else
       echo "ci: pytest-cov unavailable (offline container); running without coverage" >&2
@@ -48,9 +49,17 @@ python -m pytest -x -q ${MARK[@]+"${MARK[@]}"} ${COV[@]+"${COV[@]}"}
 timeout --signal=INT 300 python -X faulthandler -m pytest -x -q \
   tests/test_fault_tolerance.py tests/test_lane_fleet.py
 
-# Benchmark smoke: smallest shapes only, proves the kernel + serving paths
-# still run end-to-end (does not touch the committed BENCH_*.json files).
-SMOKE=1 python -m benchmarks.bench_kernels
+# Benchmark smoke + perf gate: smallest shapes under the pinned bench env,
+# written to a throwaway JSON, then the speedup *ratios* (fused-vs-im2col,
+# jax-vs-numpy — ratios, because absolute µs swing ~±30% in the container)
+# are gated against the committed BENCH_kernels.json.  --require makes the
+# gate bite on a bench that silently drops a row.
+BENCH_FRESH="$(mktemp /tmp/ci_bench_fresh.XXXXXX.json)"
+SMOKE=1 BENCH_OUT="$BENCH_FRESH" python -m benchmarks.bench_kernels
+python scripts/perf_gate.py --fresh "$BENCH_FRESH" \
+  --require 'kernels/conv_layer_fused_*' \
+  --require 'kernels/frontend_jax_*'
+rm -f "$BENCH_FRESH"
 SMOKE=1 python -m benchmarks.bench_serving
 
 # Sharded-driver smoke: the --shards path boots 2 simulated devices and

@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Perf-regression gate: compare a fresh bench JSON against the committed
+baseline (``BENCH_kernels.json``) and exit nonzero on regression.
+
+The gate compares speedup *ratios* (``speedup_vs_im2col``,
+``speedup_vs_numpy``, …: any ``speedup_vs*`` field), never absolute
+microseconds — container timing noise moves both sides of a ratio together,
+so the ratio is stable where absolutes swing ~±30% run to run.  A fresh
+ratio is a regression when it falls below ``baseline * (1 - band)``.
+
+Rules:
+
+* fresh row + baseline row both carry a ratio key  -> gated (band applies)
+* fresh row absent from the baseline                -> allowed (new bench;
+  reported so the baseline gets regenerated, never a failure)
+* ``--require GLOB`` (repeatable): every glob must match at least one
+  *gated-or-new* fresh row name — this is the bite that catches a bench
+  silently dropping a row (the regression the old eyeball-diff missed)
+* env fingerprint mismatch between fresh and baseline rows -> warning only
+  (the fingerprint names the environment; a mismatch explains a surprise,
+  it is not itself a failure)
+
+Usage (what ``scripts/ci.sh`` runs)::
+
+    SMOKE=1 BENCH_OUT=/tmp/fresh.json python -m benchmarks.bench_kernels
+    python scripts/perf_gate.py --fresh /tmp/fresh.json \
+        --require 'kernels/conv_layer_fused_*' \
+        --require 'kernels/frontend_jax_*'
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import sys
+from pathlib import Path
+
+#: default noise band on ratio comparisons (PR-4 measurement: container
+#: wall-clock noise is ~±30%; ratios cancel most of it, the band absorbs
+#: the rest)
+DEFAULT_BAND = 0.30
+
+RATIO_PREFIX = "speedup_vs"
+
+
+def _ratio_keys(rec: dict) -> list[str]:
+    return sorted(k for k in rec if k.startswith(RATIO_PREFIX))
+
+
+def compare(
+    fresh: dict, baseline: dict, *, band: float = DEFAULT_BAND,
+    require: list[str] | None = None,
+) -> dict:
+    """Pure comparison: returns ``{"failures": [...], "warnings": [...],
+    "checked": [...], "new": [...]}`` — the CLI turns failures into exit 1."""
+    failures: list[str] = []
+    warnings: list[str] = []
+    checked: list[str] = []
+    new: list[str] = []
+    for name, rec in sorted(fresh.items()):
+        keys = _ratio_keys(rec)
+        if not keys:
+            continue
+        base = baseline.get(name)
+        if base is None:
+            new.append(name)
+            continue
+        bfp, ffp = base.get("env_fingerprint"), rec.get("env_fingerprint")
+        if bfp and ffp and bfp != ffp:
+            warnings.append(
+                f"{name}: env fingerprint changed {bfp} -> {ffp} "
+                "(rows measured in different pinned environments)"
+            )
+        for key in keys:
+            b, f = base.get(key), rec.get(key)
+            if b is None or f is None:
+                continue
+            floor = b * (1.0 - band)
+            if f < floor:
+                failures.append(
+                    f"{name}.{key}: {f:.3f} < {floor:.3f} "
+                    f"(baseline {b:.3f}, band {band:.0%})"
+                )
+            else:
+                checked.append(f"{name}.{key}: {f:.3f} vs baseline {b:.3f} ok")
+    for pat in require or []:
+        hits = [n for n in fresh if fnmatch.fnmatch(n, pat) and _ratio_keys(fresh[n])]
+        if not hits:
+            failures.append(
+                f"required row pattern {pat!r} matched no fresh row with a "
+                f"{RATIO_PREFIX}* field (bench silently dropped it?)"
+            )
+    return {"failures": failures, "warnings": warnings, "checked": checked, "new": new}
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--fresh", required=True, help="fresh bench JSON (BENCH_OUT)")
+    ap.add_argument(
+        "--baseline", default="BENCH_kernels.json",
+        help="committed baseline JSON (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--band", type=float, default=DEFAULT_BAND,
+        help="allowed fractional drop in a ratio before it fails "
+             "(default: %(default)s)",
+    )
+    ap.add_argument(
+        "--require", action="append", default=[], metavar="GLOB",
+        help="fail unless at least one gated fresh row matches (repeatable)",
+    )
+    args = ap.parse_args(argv)
+
+    fresh_path, base_path = Path(args.fresh), Path(args.baseline)
+    if not fresh_path.exists():
+        print(f"perf_gate: fresh file {fresh_path} missing", file=sys.stderr)
+        return 2
+    if not base_path.exists():
+        print(f"perf_gate: baseline {base_path} missing", file=sys.stderr)
+        return 2
+    result = compare(
+        json.loads(fresh_path.read_text()),
+        json.loads(base_path.read_text()),
+        band=args.band, require=args.require,
+    )
+    for line in result["checked"]:
+        print(f"perf_gate: {line}")
+    for name in result["new"]:
+        print(f"perf_gate: {name}: new row (not in baseline) — allowed")
+    for line in result["warnings"]:
+        print(f"perf_gate: WARNING: {line}")
+    for line in result["failures"]:
+        print(f"perf_gate: FAIL: {line}", file=sys.stderr)
+    if result["failures"]:
+        print(
+            f"perf_gate: {len(result['failures'])} failure(s) vs {base_path} "
+            f"(band {args.band:.0%}). If the change is intentional, regenerate "
+            "the baseline: python -m benchmarks.bench_kernels && SMOKE=1 "
+            "BENCH_OUT=BENCH_kernels.json BENCH_MERGE=1 python -m benchmarks.bench_kernels",
+            file=sys.stderr,
+        )
+        return 1
+    print(
+        f"perf_gate: OK — {len(result['checked'])} ratio(s) within "
+        f"{args.band:.0%} of baseline, {len(result['new'])} new row(s)"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

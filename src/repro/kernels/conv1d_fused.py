@@ -6,9 +6,11 @@ activation — then paying two more full HBM round-trips for the bias add and
 the ReLU.  This kernel keeps the whole layer inside the compute fabric:
 
 * **in-kernel im2col** — each grid step loads one (bl, Cin) activation block
-  plus a (K-1, Cin) halo (the next block's first rows) and forms the K
-  shifted views with static slices in VMEM.  No patch tensor ever exists in
-  HBM; the only duplicated bytes are the K-1 halo rows per block.
+  plus a sublane-rounded halo view (the first rows of the *next* block,
+  read straight from the same padded HBM buffer through a second BlockSpec
+  with a shifted index map) and forms the K shifted views with static
+  slices in VMEM.  No patch tensor and no separate halo tensor ever exist
+  in HBM; 1-tap convs skip the halo operand entirely.
 * **weight-stationary taps** — the full (K, Cin, bn) weight block sits in
   VMEM for the whole grid step; the K tap matmuls accumulate into one int32
   register tile (the extended-precision accumulator discipline shared with
@@ -16,6 +18,11 @@ the ReLU.  This kernel keeps the whole layer inside the compute fabric:
 * **fused epilogue** — dequant, bias add, ReLU and the optional PACT clip
   happen on the accumulator tile, then a single fp32 store.  One HBM write
   per layer instead of three.
+
+Block shapes default to ``kernels.tiling.select_conv_tiles`` — picked per
+problem shape from the declared per-core VMEM budget, rounded to MXU/lane
+granules.  Tile choice never changes the int32 accumulator bits (pinned by
+``tests/test_tiling.py``).
 
 The layout contract matches ``conv1d_q``: activations (B, L, Cin) int8 with
 a per-tensor *or per-sample* ((B,)-broadcastable) scale, weights
@@ -32,16 +39,22 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.quantization import QTensor, fxp8_quantize, int8_symmetric
+from repro.kernels import tiling
 from repro.kernels.backend import resolve_interpret
 
 
-def _kernel(xm_ref, xh_ref, w_ref, *rest, k, bl, act, has_bias, has_clip, return_acc):
+def _kernel(xm_ref, *rest, k, bl, act, has_halo, has_bias, has_clip, return_acc):
     i = 0
+    if has_halo:
+        xh_ref = rest[0]
+        i = 1
+    w_ref = rest[i]
+    i += 1
     if return_acc:
         xs_ref = ws_ref = b_ref = c_ref = None
     else:
-        xs_ref, ws_ref = rest[0], rest[1]
-        i = 2
+        xs_ref, ws_ref = rest[i], rest[i + 1]
+        i += 2
         b_ref = rest[i] if has_bias else None
         i += has_bias
         c_ref = rest[i] if has_clip else None
@@ -49,9 +62,10 @@ def _kernel(xm_ref, xh_ref, w_ref, *rest, k, bl, act, has_bias, has_clip, return
     o_ref = rest[i]
 
     xm = xm_ref[0]  # (bl, Cin) int8 activation block
-    if k > 1:
-        xh = xh_ref[0, 0]  # (K-1, Cin) halo: first rows of the next block
-        xcat = jnp.concatenate([xm, xh], axis=0)  # (bl + K - 1, Cin)
+    if has_halo:
+        # First k-1 rows of the next length block, read through the shifted
+        # view of the same padded buffer (no HBM halo tensor exists).
+        xcat = jnp.concatenate([xm, xh_ref[0, : k - 1]], axis=0)
     else:
         xcat = xm
     # im2col via shifted static slices of the VMEM-resident block: tap t of
@@ -90,8 +104,8 @@ def conv1d_fused_q(
     *,
     act: str | None = None,  # None or "relu"
     clip: jax.Array | None = None,  # scalar fp32 upper clip (PACT alpha)
-    bl: int = 128,  # output rows per grid step (length-axis tile)
-    bn: int = 128,  # output channels per grid step
+    bl: int | None = None,  # output rows per grid step (None: VMEM-budgeted)
+    bn: int | None = None,  # output channels per grid step (None: VMEM-budgeted)
     lane: int = 128,  # Cin padding granule (MXU lane width)
     interpret: bool | None = None,
     return_acc: bool = False,
@@ -102,32 +116,44 @@ def conv1d_fused_q(
     b, l, cin = x_q.shape
     k, cin2, cout = w_q.shape
     assert cin == cin2, (x_q.shape, w_q.shape)
+    if bl is None or bn is None:
+        picked = tiling.select_conv_tiles(
+            b, l, cin, cout, k,
+            lane=lane,
+            has_bias=bias is not None and not return_acc,
+            has_clip=clip is not None and not return_acc,
+        )
+        bl = picked.bl if bl is None else bl
+        bn = picked.bn if bn is None else bn
     cin_p, cout_p, lout_p = _rup(cin, lane), _rup(cout, bn), _rup(l, bl)
     nblk = lout_p // bl
     pad_l = (k - 1) // 2
-    # HBM layout: per-batch zero halo so input row l0 + t of tap t is a
-    # plain shifted read; total padded length covers the last block's halo.
-    lp = lout_p + k - 1
+    has_halo = k > 1
+    # HBM layout: one padded buffer ('same' zero pad baked in, so input row
+    # l0 + t of tap t is a plain shifted read).  The halo is NOT a separate
+    # tensor — it is a second BlockSpec view of this same buffer whose index
+    # map points one length-block ahead; the trailing pad below gives the
+    # last block's halo view somewhere to read.
+    hr = tiling.conv_halo_rows(k) if has_halo else 0
+    assert not has_halo or bl % hr == 0, (bl, hr)  # exact halo block index
+    lp = lout_p + hr
     xp = jnp.pad(
         x_q, ((0, 0), (pad_l, lp - pad_l - l), (0, cin_p - cin))
     )  # (B, Lp, Cin_p) int8
-    main = xp[:, :lout_p, :]
-    if k > 1:
-        halo = jnp.stack(
-            [xp[:, (i + 1) * bl : (i + 1) * bl + k - 1, :] for i in range(nblk)],
-            axis=1,
-        )  # (B, nblk, K-1, Cin_p) — the only im2col duplication that exists
-    else:
-        halo = jnp.zeros((b, nblk, 1, cin_p), jnp.int8)
     wp = jnp.pad(w_q, ((0, 0), (0, cin_p - cin), (0, cout_p - cout)))
 
-    halo_rows = max(k - 1, 1)
-    in_specs = [
-        pl.BlockSpec((1, bl, cin_p), lambda bb, i, j: (bb, i, 0)),
-        pl.BlockSpec((1, 1, halo_rows, cin_p), lambda bb, i, j: (bb, i, 0, 0)),
-        pl.BlockSpec((k, cin_p, bn), lambda bb, i, j: (0, 0, j)),
-    ]
-    inputs = [main, halo, wp]
+    in_specs = [pl.BlockSpec((1, bl, cin_p), lambda bb, i, j: (bb, i, 0))]
+    inputs: list = [xp]
+    if has_halo:
+        # Overlapping read of the padded main buffer: block index is in
+        # halo-row granules, so step i's halo starts at row (i+1) * bl.
+        mult = bl // hr
+        in_specs.append(
+            pl.BlockSpec((1, hr, cin_p), lambda bb, i, j: (bb, (i + 1) * mult, 0))
+        )
+        inputs.append(xp)
+    in_specs.append(pl.BlockSpec((k, cin_p, bn), lambda bb, i, j: (0, 0, j)))
+    inputs.append(wp)
     has_bias = bias is not None and not return_acc
     has_clip = clip is not None and not return_acc
     if not return_acc:
@@ -163,6 +189,7 @@ def conv1d_fused_q(
             k=k,
             bl=bl,
             act=act,
+            has_halo=has_halo,
             has_bias=has_bias,
             has_clip=has_clip,
             return_acc=return_acc,

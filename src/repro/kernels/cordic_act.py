@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels import tiling
 from repro.kernels.backend import resolve_interpret
 
 F = 16  # fraction bits (Q15.16)
@@ -132,14 +133,23 @@ def cordic_activation(
     x: jax.Array,
     mode: str = "tanh",
     *,
-    block: tuple[int, int] = (256, 128),
+    block: tuple[int, int] | None = None,  # None: VMEM-budgeted
     interpret: bool | None = None,
 ) -> jax.Array:
-    """Elementwise CORDIC activation over an arbitrary-shape fp32 tensor."""
+    """Elementwise CORDIC activation over an arbitrary-shape fp32 tensor.
+
+    The (rows, lanes) block defaults to
+    ``tiling.select_elementwise_tiles`` for the flattened element count;
+    block choice only changes padding/grid, never the per-element Q15.16
+    shift-add numerics (pinned bitwise by ``tests/test_tiling.py``).
+    """
     assert mode in MODES, mode
     interpret = resolve_interpret(interpret)
     shape = x.shape
     flat = x.reshape(-1)
+    if block is None:
+        t = tiling.select_elementwise_tiles(flat.shape[0])
+        block = (t.bm, t.bn)
     bm, bn = block
     n = flat.shape[0]
     cols = bn

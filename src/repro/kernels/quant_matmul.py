@@ -8,8 +8,13 @@ final scale-and-shift/dequant happens once per output tile (the accelerator's
 
 Grid is (M/bm, N/bn, K/bk) with K innermost so each (m, n) output tile keeps
 its accumulator resident in VMEM across the K loop (weights-stationary within
-a tile, exactly the shared-datapath reuse discipline).  Tile sides are
-multiples of 128 to align with the 128x128 MXU.
+a tile, exactly the shared-datapath reuse discipline).  Tile sides default to
+``kernels.tiling.select_matmul_tiles`` — VMEM-budgeted per problem shape,
+rounded to MXU/lane granules (bm to the int8 sublane, bn/bk to the 128
+lane).  Because every output element's accumulator sums the same set of
+products whatever the grid cut, tile choice never changes the int32
+accumulator bits (``tests/test_tiling.py``); ``return_acc=True`` exposes
+those raw accumulators as the sign-off surface.
 
 The dequant step doubles as the layer *epilogue*: an optional bias add,
 ReLU, and PACT-style clip are applied on the accumulator tile before the
@@ -25,15 +30,21 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tiling
 from repro.kernels.backend import resolve_interpret
 
 
-def _kernel(x_ref, w_ref, xs_ref, ws_ref, *rest, act, has_bias, has_clip):
+def _kernel(x_ref, w_ref, *rest, act, has_bias, has_clip, return_acc):
     i = 0
-    b_ref = rest[i] if has_bias else None
-    i += has_bias
-    c_ref = rest[i] if has_clip else None
-    i += has_clip
+    if return_acc:
+        xs_ref = ws_ref = b_ref = c_ref = None
+    else:
+        xs_ref, ws_ref = rest[0], rest[1]
+        i = 2
+        b_ref = rest[i] if has_bias else None
+        i += has_bias
+        c_ref = rest[i] if has_clip else None
+        i += has_clip
     o_ref, acc_ref = rest[i], rest[i + 1]
 
     k = pl.program_id(2)
@@ -47,7 +58,10 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, *rest, act, has_bias, has_clip):
     )
 
     @pl.when(k == pl.num_programs(2) - 1)
-    def _dequant():
+    def _epilogue():
+        if return_acc:
+            o_ref[...] = acc_ref[...]
+            return
         y = acc_ref[...].astype(jnp.float32) * xs_ref[...] * ws_ref[...]
         if has_bias:
             y = y + b_ref[...]
@@ -59,7 +73,7 @@ def _kernel(x_ref, w_ref, xs_ref, ws_ref, *rest, act, has_bias, has_clip):
 
 
 @functools.partial(
-    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret")
+    jax.jit, static_argnames=("act", "bm", "bn", "bk", "interpret", "return_acc")
 )
 def quant_matmul(
     x_q: jax.Array,  # (M, K) int8
@@ -70,10 +84,11 @@ def quant_matmul(
     *,
     act: str | None = None,  # None or "relu", fused on the accumulator tile
     clip: jax.Array | None = None,  # scalar fp32 upper clip (PACT alpha)
-    bm: int = 128,
-    bn: int = 128,
-    bk: int = 128,
+    bm: int | None = None,  # None: VMEM-budgeted (tiling.select_matmul_tiles)
+    bn: int | None = None,
+    bk: int | None = None,
     interpret: bool | None = None,  # None: autodetect (compiled on TPU)
+    return_acc: bool = False,  # skip dequant, return raw int32 accumulators
 ) -> jax.Array:
     """Dequantised fp32 product of int8 operands; pads to tile multiples.
 
@@ -86,38 +101,58 @@ def quant_matmul(
     m, k = x_q.shape
     k2, n = w_q.shape
     assert k == k2, (x_q.shape, w_q.shape)
+    if bm is None or bn is None or bk is None:
+        picked = tiling.select_matmul_tiles(
+            m, k, n,
+            has_bias=bias is not None and not return_acc,
+            has_clip=clip is not None and not return_acc,
+        )
+        bm = picked.bm if bm is None else bm
+        bn = picked.bn if bn is None else bn
+        bk = picked.bk if bk is None else bk
     mp, kp, np_ = _rup(m, bm), _rup(k, bk), _rup(n, bn)
     x_q = jnp.pad(x_q, ((0, mp - m), (0, kp - k)))
     w_q = jnp.pad(w_q, ((0, kp - k), (0, np_ - n)))
-    xs = jnp.broadcast_to(x_scale.astype(jnp.float32), (m, 1))
-    xs = jnp.pad(xs, ((0, mp - m), (0, 0)), constant_values=1.0)
-    ws = jnp.broadcast_to(w_scale.astype(jnp.float32), (1, n))
-    ws = jnp.pad(ws, ((0, 0), (0, np_ - n)), constant_values=1.0)
 
     grid = (mp // bm, np_ // bn, kp // bk)
     in_specs = [
         pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
         pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
-        pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
-        pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
     ]
-    inputs = [x_q, w_q, xs, ws]
-    if bias is not None:
-        b = jnp.broadcast_to(bias.astype(jnp.float32).reshape(1, -1), (1, n))
-        inputs.append(jnp.pad(b, ((0, 0), (0, np_ - n))))
-        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
-    if clip is not None:
-        inputs.append(jnp.asarray(clip, jnp.float32).reshape(1, 1))
-        in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
+    inputs = [x_q, w_q]
+    has_bias = bias is not None and not return_acc
+    has_clip = clip is not None and not return_acc
+    if not return_acc:
+        xs = jnp.broadcast_to(x_scale.astype(jnp.float32), (m, 1))
+        xs = jnp.pad(xs, ((0, mp - m), (0, 0)), constant_values=1.0)
+        ws = jnp.broadcast_to(w_scale.astype(jnp.float32), (1, n))
+        ws = jnp.pad(ws, ((0, 0), (0, np_ - n)), constant_values=1.0)
+        inputs += [xs, ws]
+        in_specs += [
+            pl.BlockSpec((bm, 1), lambda i, j, kk: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ]
+        if has_bias:
+            b = jnp.broadcast_to(bias.astype(jnp.float32).reshape(1, -1), (1, n))
+            inputs.append(jnp.pad(b, ((0, 0), (0, np_ - n))))
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        if has_clip:
+            inputs.append(jnp.asarray(clip, jnp.float32).reshape(1, 1))
+            in_specs.append(pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0)))
 
+    out_dtype = jnp.int32 if return_acc else jnp.float32
     out = pl.pallas_call(
         functools.partial(
-            _kernel, act=act, has_bias=bias is not None, has_clip=clip is not None
+            _kernel,
+            act=act,
+            has_bias=has_bias,
+            has_clip=has_clip,
+            return_acc=return_acc,
         ),
         grid=grid,
         in_specs=in_specs,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(*inputs)

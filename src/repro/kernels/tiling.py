@@ -1,0 +1,228 @@
+"""VMEM-budget-driven block-shape selection for the Pallas kernels.
+
+The kernels used to hardcode 128-sided tiles everywhere, which is only one
+point of the compiled-backend design space: a (bm, bn, bk) = (128, 128, 128)
+matmul tile uses ~100 KB of VMEM while a v5e core has ~16 MB, and conversely
+a large-Cin conv block can silently blow the budget once the halo view and
+the weight taps are counted.  This module makes the geometry explicit: each
+selector takes the problem shape plus a declared per-core VMEM budget and
+returns block shapes that
+
+* respect the hardware granules — the last (lane) dimension is always a
+  multiple of 128, the second-to-last (sublane) a multiple of the dtype's
+  minimum tile (32 for int8 operands, 8 for fp32) — and
+* fit the budget under the Pallas pipeline model: blocked operands and
+  outputs are double-buffered (2x their block bytes), scratch accumulators
+  are resident once.
+
+Numerical contract: tile choice NEVER changes the int32 accumulators.  Every
+output element's accumulator sums exactly the same set of int8 x int8
+products regardless of how the grid is cut, and int32 addition is
+associative and commutative (wrap-around included), so the accumulator bits
+are invariant under any (bl, bm, bn, bk) selection.  ``tests/test_tiling.py``
+pins this bitwise across distinct budgets for all three kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+#: MXU/VPU lane width — the last dim of every block is a multiple of this.
+LANE = 128
+
+#: minimum sublane multiple per operand byte-width (int8 -> 32, fp32 -> 8)
+SUBLANE_INT8 = 32
+SUBLANE_FP32 = 8
+
+#: v5e VMEM per core (~16 MB) and the default working budget we declare for
+#: one kernel's blocks.  The budget is deliberately half the physical VMEM:
+#: the other half covers semaphores, compiler-managed spills and the slack
+#: the pipeline needs to overlap grid steps.
+VMEM_BYTES_PER_CORE = 16 * 2**20
+DEFAULT_VMEM_BUDGET = 8 * 2**20
+
+#: ceiling on any single block side — beyond this, bigger tiles stop paying
+#: (the MXU is saturated) and VMEM pressure just grows.
+MAX_TILE = 512
+
+
+def _rup(x: int, b: int) -> int:
+    return (x + b - 1) // b * b
+
+
+def _shrink(v: int, granule: int) -> int:
+    """One shrink step: halve towards the granule, never below it."""
+    return max(granule, _rup(v // 2, granule) if v // 2 > granule else granule)
+
+
+@dataclass(frozen=True)
+class MatmulTiles:
+    bm: int
+    bn: int
+    bk: int
+
+
+@dataclass(frozen=True)
+class ConvTiles:
+    bl: int  # output rows (length-axis tile)
+    bn: int  # output channels
+
+
+@dataclass(frozen=True)
+class ElementwiseTiles:
+    bm: int
+    bn: int
+
+
+def matmul_vmem_bytes(
+    bm: int, bn: int, bk: int, *, has_bias: bool = False, has_clip: bool = False
+) -> int:
+    """Pipeline-model VMEM bytes for one ``quant_matmul`` grid step.
+
+    Blocked inputs/outputs count twice (double buffering); the int32
+    accumulator scratch is resident once.
+    """
+    x = bm * bk  # int8
+    w = bk * bn  # int8
+    xs = bm * 4  # (bm, 1) fp32 scale column
+    ws = bn * 4  # (1, bn) fp32 scale row
+    bias = bn * 4 if has_bias else 0
+    clip = 4 if has_clip else 0
+    out = bm * bn * 4  # fp32
+    acc = bm * bn * 4  # int32 scratch, single-buffered
+    return 2 * (x + w + xs + ws + bias + clip + out) + acc
+
+
+def select_matmul_tiles(
+    m: int,
+    k: int,
+    n: int,
+    *,
+    budget: int = DEFAULT_VMEM_BUDGET,
+    has_bias: bool = False,
+    has_clip: bool = False,
+) -> MatmulTiles:
+    """Pick (bm, bn, bk) for an (M, K) x (K, N) W8A8 matmul.
+
+    Starts from the largest granule-aligned tiles that the problem shape and
+    ``MAX_TILE`` allow, then shrinks the side that frees the most VMEM until
+    the pipeline footprint fits the budget.  Deterministic in its inputs.
+    """
+    bm = min(_rup(m, SUBLANE_INT8), MAX_TILE)
+    bn = min(_rup(n, LANE), MAX_TILE)
+    bk = min(_rup(k, LANE), MAX_TILE)
+    while matmul_vmem_bytes(bm, bn, bk, has_bias=has_bias, has_clip=has_clip) > budget:
+        # Shrink the dimension whose reduction frees the most bytes; bk is
+        # preferred on ties (it only lengthens the in-VMEM K loop, while bm/bn
+        # cuts shrink MXU utilisation).
+        gains = {
+            "bk": _gain_matmul(bm, bn, bk, "bk", has_bias, has_clip),
+            "bm": _gain_matmul(bm, bn, bk, "bm", has_bias, has_clip),
+            "bn": _gain_matmul(bm, bn, bk, "bn", has_bias, has_clip),
+        }
+        dim = max(gains, key=lambda d: (gains[d], d == "bk"))
+        if gains[dim] <= 0:
+            break  # every side is at its granule — smallest legal tiling
+        if dim == "bm":
+            bm = _shrink(bm, SUBLANE_INT8)
+        elif dim == "bn":
+            bn = _shrink(bn, LANE)
+        else:
+            bk = _shrink(bk, LANE)
+    return MatmulTiles(bm, bn, bk)
+
+
+def _gain_matmul(bm, bn, bk, dim, has_bias, has_clip):
+    now = matmul_vmem_bytes(bm, bn, bk, has_bias=has_bias, has_clip=has_clip)
+    s = {
+        "bm": (_shrink(bm, SUBLANE_INT8), bn, bk),
+        "bn": (bm, _shrink(bn, LANE), bk),
+        "bk": (bm, bn, _shrink(bk, LANE)),
+    }[dim]
+    return now - matmul_vmem_bytes(*s, has_bias=has_bias, has_clip=has_clip)
+
+
+def conv_halo_rows(k: int) -> int:
+    """Sublane-rounded row count of the halo view (the first rows of the
+    next length block that tap ``t`` of the last outputs reads)."""
+    return _rup(max(k - 1, 1), SUBLANE_INT8)
+
+
+def conv_vmem_bytes(
+    bl: int,
+    bn: int,
+    *,
+    k: int,
+    cin_p: int,
+    has_bias: bool = False,
+    has_clip: bool = False,
+) -> int:
+    """Pipeline-model VMEM bytes for one ``conv1d_fused_q`` grid step."""
+    xm = bl * cin_p  # int8 main activation block
+    xh = conv_halo_rows(k) * cin_p if k > 1 else 0  # int8 halo view
+    w = k * cin_p * bn  # int8 weight taps (stationary per step, still blocked)
+    xs = 4  # (1, 1) per-sample scale
+    ws = bn * 4
+    bias = bn * 4 if has_bias else 0
+    clip = 4 if has_clip else 0
+    out = bl * bn * 4  # fp32 (or int32 accumulator output — same bytes)
+    return 2 * (xm + xh + w + xs + ws + bias + clip + out)
+
+
+def select_conv_tiles(
+    b: int,
+    l: int,
+    cin: int,
+    cout: int,
+    k: int,
+    *,
+    budget: int = DEFAULT_VMEM_BUDGET,
+    lane: int = LANE,
+    has_bias: bool = False,
+    has_clip: bool = False,
+) -> ConvTiles:
+    """Pick (bl, bn) for a (B, L, Cin) x (K, Cin, Cout) fused conv.
+
+    ``Cin`` is not tiled (the taps need the full input-channel extent in
+    VMEM), so its padded extent is a fixed term; the selector trades the
+    length tile against the output-channel tile.  ``bl`` stays a multiple of
+    the halo granule so the halo view's block index is exact.
+    """
+    cin_p = _rup(cin, lane)
+    granule_l = max(SUBLANE_INT8, conv_halo_rows(k) if k > 1 else SUBLANE_INT8)
+    bl = min(_rup(l, granule_l), MAX_TILE)
+    bn = min(_rup(cout, LANE), MAX_TILE)
+    while (
+        conv_vmem_bytes(bl, bn, k=k, cin_p=cin_p, has_bias=has_bias, has_clip=has_clip)
+        > budget
+    ):
+        shrunk_bl = _shrink(bl, granule_l)
+        shrunk_bn = _shrink(bn, LANE)
+        gain_bl = _delta_conv(bl, bn, shrunk_bl, bn, k, cin_p, has_bias, has_clip)
+        gain_bn = _delta_conv(bl, bn, bl, shrunk_bn, k, cin_p, has_bias, has_clip)
+        if max(gain_bl, gain_bn) <= 0:
+            break  # at the smallest legal tiling for this Cin
+        if gain_bn >= gain_bl:
+            bn = shrunk_bn
+        else:
+            bl = shrunk_bl
+    return ConvTiles(bl, bn)
+
+
+def _delta_conv(bl, bn, bl2, bn2, k, cin_p, has_bias, has_clip):
+    kw = dict(k=k, cin_p=cin_p, has_bias=has_bias, has_clip=has_clip)
+    return conv_vmem_bytes(bl, bn, **kw) - conv_vmem_bytes(bl2, bn2, **kw)
+
+
+def select_elementwise_tiles(
+    n_elems: int, *, budget: int = DEFAULT_VMEM_BUDGET
+) -> ElementwiseTiles:
+    """Pick the (bm, LANE) block for an elementwise fp32 kernel
+    (``cordic_activation``): the widest fp32-sublane-aligned row count whose
+    double-buffered in+out blocks fit the budget, capped at the problem size.
+    """
+    rows_needed = _rup(max(1, (n_elems + LANE - 1) // LANE), SUBLANE_FP32)
+    bm = min(rows_needed, MAX_TILE)
+    # in + out fp32 blocks, both double-buffered
+    while 2 * (2 * bm * LANE * 4) > budget and bm > SUBLANE_FP32:
+        bm = _shrink(bm, SUBLANE_FP32)
+    return ElementwiseTiles(bm, LANE)

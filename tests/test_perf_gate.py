@@ -1,0 +1,115 @@
+"""Tests for ``scripts/perf_gate.py`` — the CI perf-regression gate.
+
+The gate must actually bite: an injected synthetic regression in a copied
+bench JSON exits nonzero; a drop inside the noise band passes; a required
+row pattern that matches nothing fails (a bench silently dropping a row is
+exactly the regression an eyeball diff misses); a brand-new row is allowed.
+"""
+import importlib.util
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parents[1]
+GATE = ROOT / "scripts" / "perf_gate.py"
+
+_spec = importlib.util.spec_from_file_location("perf_gate", GATE)
+perf_gate = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(perf_gate)
+
+
+def _baseline() -> dict:
+    return {
+        "kernels/conv_layer_fused_8x1096x64": {
+            "median_us": 100.0,
+            "speedup_vs_im2col": 2.0,
+            "env_fingerprint": "aaaaaaaaaa",
+        },
+        "kernels/frontend_jax_mfcc20_B8": {
+            "median_us": 50.0,
+            "speedup_vs_numpy": 4.0,
+            "env_fingerprint": "aaaaaaaaaa",
+        },
+        "kernels/quant_matmul_256x1096x64": {"median_us": 10.0},  # no ratio: ungated
+    }
+
+
+def test_injected_regression_fails():
+    fresh = _baseline()
+    fresh["kernels/conv_layer_fused_8x1096x64"]["speedup_vs_im2col"] = 1.0  # 2.0 -> 1.0
+    res = perf_gate.compare(fresh, _baseline(), band=0.30)
+    assert len(res["failures"]) == 1
+    assert "speedup_vs_im2col" in res["failures"][0]
+
+
+def test_drop_within_noise_band_passes():
+    fresh = _baseline()
+    # 2.0 * (1 - 0.30) = 1.40 floor; 1.5 is a real drop but inside the band
+    fresh["kernels/conv_layer_fused_8x1096x64"]["speedup_vs_im2col"] = 1.5
+    res = perf_gate.compare(fresh, _baseline(), band=0.30)
+    assert res["failures"] == []
+    assert any("conv_layer_fused" in c for c in res["checked"])
+
+
+def test_missing_required_row_fails():
+    fresh = _baseline()
+    del fresh["kernels/frontend_jax_mfcc20_B8"]  # bench silently dropped it
+    res = perf_gate.compare(
+        fresh, _baseline(), require=["kernels/frontend_jax_*"],
+    )
+    assert len(res["failures"]) == 1
+    assert "frontend_jax" in res["failures"][0]
+    # a row present without a ratio field must not satisfy the requirement
+    fresh["kernels/frontend_jax_mfcc20_B8"] = {"median_us": 50.0}
+    res = perf_gate.compare(fresh, _baseline(), require=["kernels/frontend_jax_*"])
+    assert len(res["failures"]) == 1
+
+
+def test_new_row_allowed():
+    fresh = _baseline()
+    fresh["kernels/conv_layer_fused_64x1096x256"] = {
+        "median_us": 900.0, "speedup_vs_im2col": 0.5,  # terrible, but new
+    }
+    res = perf_gate.compare(fresh, _baseline())
+    assert res["failures"] == []
+    assert "kernels/conv_layer_fused_64x1096x256" in res["new"]
+
+
+def test_env_fingerprint_mismatch_warns_not_fails():
+    fresh = _baseline()
+    fresh["kernels/conv_layer_fused_8x1096x64"]["env_fingerprint"] = "bbbbbbbbbb"
+    res = perf_gate.compare(fresh, _baseline())
+    assert res["failures"] == []
+    assert any("fingerprint" in w for w in res["warnings"])
+
+
+def test_cli_exit_codes_on_copied_json(tmp_path):
+    """End-to-end: the script as CI runs it, on a copied bench JSON with a
+    synthetic regression injected — exit 1; clean copy — exit 0; missing
+    fresh file — exit 2."""
+    base = tmp_path / "BENCH_kernels.json"
+    base.write_text(json.dumps(_baseline()))
+    ok = tmp_path / "fresh_ok.json"
+    ok.write_text(json.dumps(_baseline()))
+    bad_rows = _baseline()
+    bad_rows["kernels/frontend_jax_mfcc20_B8"]["speedup_vs_numpy"] = 0.1
+    bad = tmp_path / "fresh_bad.json"
+    bad.write_text(json.dumps(bad_rows))
+
+    cmd = [sys.executable, str(GATE), "--baseline", str(base)]
+    req = ["--require", "kernels/conv_layer_fused_*"]
+    p = subprocess.run(
+        cmd + ["--fresh", str(ok)] + req, capture_output=True, text=True,
+    )
+    assert p.returncode == 0, p.stderr
+    assert "perf_gate: OK" in p.stdout
+    p = subprocess.run(
+        cmd + ["--fresh", str(bad)] + req, capture_output=True, text=True,
+    )
+    assert p.returncode == 1
+    assert "FAIL" in p.stderr
+    p = subprocess.run(
+        cmd + ["--fresh", str(tmp_path / "nope.json")], capture_output=True, text=True,
+    )
+    assert p.returncode == 2

@@ -1,0 +1,206 @@
+"""VMEM-budget tile selection: legality properties of the selector itself,
+and the load-bearing numerical contract — block-shape choice NEVER changes
+the int32 accumulator bits of any kernel.
+
+The invariance legs run every kernel at >= 3 distinct tile selections
+(driven both by explicit non-128-multiple overrides and by shrinking the
+declared VMEM budget until the selector picks different geometry) and
+assert bitwise-equal accumulators / outputs.  This is what makes the
+budget-driven defaults safe to ship under the serving stack: retuning the
+budget for a different part is a pure perf knob, not a numerics change.
+
+Runs under real ``hypothesis`` when installed, else the deterministic
+fallback shim (tests/_hypothesis_fallback.py).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - bare container
+    from _hypothesis_fallback import given, settings, st
+
+from repro.core.quantization import int8_symmetric
+from repro.kernels import ops, tiling
+from repro.kernels.conv1d_fused import conv1d_fused_q
+from repro.kernels.cordic_act import cordic_activation
+from repro.kernels.quant_matmul import quant_matmul
+
+RNG = np.random.default_rng(11)
+
+
+# ---------------------------------------------------------------------------
+# Selector legality
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 3000),
+    st.integers(1, 3000),
+    st.integers(1, 3000),
+    st.sampled_from([256 << 10, 1 << 20, 4 << 20, tiling.DEFAULT_VMEM_BUDGET]),
+)
+def test_matmul_selector_fits_budget_and_granules(m, k, n, budget):
+    t = tiling.select_matmul_tiles(m, k, n, budget=budget, has_bias=True)
+    assert t.bm % tiling.SUBLANE_INT8 == 0
+    assert t.bn % tiling.LANE == 0 and t.bk % tiling.LANE == 0
+    assert t.bm <= tiling.MAX_TILE and t.bn <= tiling.MAX_TILE and t.bk <= tiling.MAX_TILE
+    used = tiling.matmul_vmem_bytes(t.bm, t.bn, t.bk, has_bias=True)
+    # Either inside the budget, or already at the smallest legal tiling.
+    smallest = (t.bm, t.bn, t.bk) == (tiling.SUBLANE_INT8, tiling.LANE, tiling.LANE)
+    assert used <= budget or smallest
+    assert used <= tiling.VMEM_BYTES_PER_CORE  # never exceeds physical VMEM
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    st.integers(1, 4000),
+    st.integers(1, 512),
+    st.integers(1, 512),
+    st.sampled_from([1, 3, 5, 7]),
+    st.sampled_from([512 << 10, 2 << 20, tiling.DEFAULT_VMEM_BUDGET]),
+)
+def test_conv_selector_fits_budget_and_granules(l, cin, cout, k, budget):
+    t = tiling.select_conv_tiles(4, l, cin, cout, k, budget=budget, has_bias=True)
+    assert t.bn % tiling.LANE == 0
+    if k > 1:
+        assert t.bl % tiling.conv_halo_rows(k) == 0  # exact halo block index
+    assert t.bl % tiling.SUBLANE_INT8 == 0
+    cin_p = (cin + tiling.LANE - 1) // tiling.LANE * tiling.LANE
+    used = tiling.conv_vmem_bytes(t.bl, t.bn, k=k, cin_p=cin_p, has_bias=True)
+    smallest_bl = max(tiling.SUBLANE_INT8, tiling.conv_halo_rows(k) if k > 1 else 0)
+    assert used <= budget or (t.bl, t.bn) == (smallest_bl, tiling.LANE)
+
+
+def test_selector_is_deterministic_and_budget_sensitive():
+    a = tiling.select_matmul_tiles(1024, 1024, 1024, budget=8 << 20)
+    b = tiling.select_matmul_tiles(1024, 1024, 1024, budget=8 << 20)
+    assert a == b  # pure function of its inputs
+    tight = tiling.select_matmul_tiles(1024, 1024, 1024, budget=256 << 10)
+    assert (tight.bm, tight.bn, tight.bk) != (a.bm, a.bn, a.bk)
+    assert tiling.matmul_vmem_bytes(tight.bm, tight.bn, tight.bk) <= 256 << 10
+
+
+def test_elementwise_selector_granules():
+    for n in (1, 100, 4096, 524288):
+        t = tiling.select_elementwise_tiles(n)
+        assert t.bn == tiling.LANE
+        assert t.bm % tiling.SUBLANE_FP32 == 0
+        assert 2 * (2 * t.bm * t.bn * 4) <= tiling.DEFAULT_VMEM_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# Tile-choice invariance: int32 accumulators are bitwise identical across
+# >= 3 distinct selections per kernel (incl. non-128 multiples).
+# ---------------------------------------------------------------------------
+
+# Explicit geometries: small sublane-granule tiles, mixed, and the legacy
+# 128-cube — none of which may move a single accumulator bit.
+MATMUL_TILES = [(32, 128, 128), (96, 256, 384), (128, 128, 128), (64, 512, 256)]
+CONV_TILES = [(32, 128), (96, 256), (128, 128), (64, 384)]
+CORDIC_BLOCKS = [(8, 128), (32, 128), (256, 128), (512, 128)]
+
+
+def _matmul_case(m=70, k=300, n=200):
+    x = jnp.asarray(RNG.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((k, n)) * 0.2, jnp.float32)
+    xq, wq = int8_symmetric(x, axis=None), int8_symmetric(w, axis=1)
+    return xq, wq
+
+
+def test_matmul_accumulators_invariant_across_tiles():
+    xq, wq = _matmul_case()
+    accs = [
+        quant_matmul(
+            xq.q, wq.q, xq.scale.reshape(1, 1), wq.scale.reshape(1, -1),
+            bm=bm, bn=bn, bk=bk, return_acc=True,
+        )
+        for bm, bn, bk in MATMUL_TILES
+    ]
+    ref = xq.q.astype(jnp.int32) @ wq.q.astype(jnp.int32)  # integer oracle
+    for acc, tiles in zip(accs, MATMUL_TILES):
+        assert acc.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(ref), err_msg=str(tiles))
+
+
+def test_matmul_accumulators_invariant_across_budgets():
+    xq, wq = _matmul_case(m=256, k=1096, n=160)
+    budgets = [256 << 10, 1 << 20, tiling.DEFAULT_VMEM_BUDGET]
+    picked = [tiling.select_matmul_tiles(256, 1096, 160, budget=bdg) for bdg in budgets]
+    assert len({(t.bm, t.bn, t.bk) for t in picked}) >= 2  # budgets actually differ
+    accs = [
+        quant_matmul(
+            xq.q, wq.q, xq.scale.reshape(1, 1), wq.scale.reshape(1, -1),
+            bm=t.bm, bn=t.bn, bk=t.bk, return_acc=True,
+        )
+        for t in picked
+    ]
+    for acc in accs[1:]:
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(accs[0]))
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_conv_accumulators_invariant_across_tiles(k):
+    x = jnp.asarray(RNG.standard_normal((2, 210, 70)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((k, 70, 150)) * 0.2, jnp.float32)
+    xq, wq = int8_symmetric(x, axis=None), int8_symmetric(w, axis=2)
+    accs = [
+        conv1d_fused_q(
+            xq.q, wq.q, xq.scale, wq.scale, bl=bl, bn=bn, return_acc=True
+        )
+        for bl, bn in CONV_TILES
+    ]
+    patches = ops._im2col(xq.q.astype(jnp.float32), k).astype(jnp.int32)
+    wmat = wq.q.reshape(k * 70, 150).astype(jnp.int32)
+    ref = (patches @ wmat).reshape(2, 210, 150)
+    for acc, tiles in zip(accs, CONV_TILES):
+        assert acc.dtype == jnp.int32
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(ref), err_msg=str(tiles))
+
+
+def test_conv_accumulators_invariant_across_budgets():
+    x = jnp.asarray(RNG.standard_normal((2, 300, 100)), jnp.float32)
+    w = jnp.asarray(RNG.standard_normal((3, 100, 200)) * 0.2, jnp.float32)
+    xq, wq = int8_symmetric(x, axis=None), int8_symmetric(w, axis=2)
+    budgets = [512 << 10, 2 << 20, tiling.DEFAULT_VMEM_BUDGET]
+    picked = [
+        tiling.select_conv_tiles(2, 300, 100, 200, 3, budget=bdg) for bdg in budgets
+    ]
+    assert len({(t.bl, t.bn) for t in picked}) >= 2
+    accs = [
+        conv1d_fused_q(
+            xq.q, wq.q, xq.scale, wq.scale, bl=t.bl, bn=t.bn, return_acc=True
+        )
+        for t in picked
+    ]
+    for acc in accs[1:]:
+        np.testing.assert_array_equal(np.asarray(acc), np.asarray(accs[0]))
+
+
+def test_cordic_bits_invariant_across_blocks():
+    x = jnp.asarray(RNG.uniform(-4, 4, (1000, 37)), jnp.float32)
+    for mode in ("tanh", "exp", "sigmoid"):
+        outs = [
+            cordic_activation(x, mode, block=blk) for blk in CORDIC_BLOCKS
+        ]
+        outs.append(cordic_activation(x, mode))  # budget-driven default
+        for o in outs[1:]:
+            np.testing.assert_array_equal(np.asarray(o), np.asarray(outs[0]))
+
+
+def test_default_tiles_match_legacy_128_bitwise():
+    """The selector-driven defaults reproduce the legacy hardcoded-128 path
+    bit for bit on the serving dequant output, not just the accumulators."""
+    xq, wq = _matmul_case(m=48, k=200, n=96)
+    bias = jnp.asarray(RNG.standard_normal(96), jnp.float32)
+    legacy = quant_matmul(
+        xq.q, wq.q, xq.scale.reshape(1, 1), wq.scale.reshape(1, -1), bias,
+        act="relu", bm=128, bn=128, bk=128,
+    )
+    picked = quant_matmul(
+        xq.q, wq.q, xq.scale.reshape(1, 1), wq.scale.reshape(1, -1), bias,
+        act="relu",
+    )
+    np.testing.assert_array_equal(np.asarray(picked), np.asarray(legacy))
