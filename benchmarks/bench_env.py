@@ -33,6 +33,10 @@ import sys
 #: the fingerprint records which way it went.
 STEP_MARKER_FLAG = "--xla_step_marker_location=1"
 
+#: Where TPU accelerators appear on a TPU VM.  Module-level so tests can
+#: point it at a tmp path and exercise the TPU leg without hardware.
+ACCEL_DEVICE_GLOB = "/dev/accel*"
+
 _state: dict = {
     "applied": False,
     "late": False,
@@ -44,7 +48,7 @@ _state: dict = {
 def _tpu_hardware_present() -> bool:
     """A TPU VM exposes its accelerators as /dev/accel* (libtpu merely being
     pip-installed — as in this CPU container — does not count)."""
-    return bool(glob.glob("/dev/accel*"))
+    return bool(glob.glob(ACCEL_DEVICE_GLOB))
 
 
 def apply(host_devices: int = 1) -> dict:
@@ -54,8 +58,8 @@ def apply(host_devices: int = 1) -> dict:
     _state["late"] = "jax" in sys.modules
     _state["host_devices"] = host_devices
     flags = [f"--xla_force_host_platform_device_count={host_devices}"]
-    if _tpu_hardware_present():
-        _state["step_marker"] = True
+    _state["step_marker"] = _tpu_hardware_present()
+    if _state["step_marker"]:
         flags.append(STEP_MARKER_FLAG)
     existing = os.environ.get("XLA_FLAGS", "")
     merged = existing.split() if existing else []

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 import json
 import os
+import shutil
+import tempfile
 import time
 
 # Simulated device pool for the sharded-dispatch rows (before jax import).
@@ -102,6 +104,23 @@ FLEET_STREAMS = 16
 FLEET_WORKERS = 4
 FLEET_WINDOWS = 6
 
+# Durability-overhead rows: the same fleet leg with a --state-dir, across
+# the fsync-policy x checkpoint-interval grid.  The interesting column is
+# ``durable_vs_plain`` (per-window cost relative to the in-memory fleet
+# benched in the same process): WAL appends ride the push path and the
+# checkpoint publish rides step(), so the ratio is the whole durability
+# tax.  ``always`` pays one disk flush per chunk (the worst case);
+# ``never`` is pure serialization cost.  SMOKE runs one small cell so the
+# CI leg still exercises the durable path end to end.
+DURABLE_GRID = (
+    ("always", 1), ("always", 4),
+    ("interval", 1), ("interval", 4),
+    ("never", 1), ("never", 4),
+)
+DURABLE_SMOKE_STREAMS = 4
+DURABLE_SMOKE_WORKERS = 2
+DURABLE_SMOKE_WINDOWS = 2
+
 
 def _smoke() -> bool:
     return bool(os.environ.get("SMOKE"))
@@ -185,37 +204,53 @@ def bench_monitor(
     }
 
 
-def bench_fleet(params, cfg, *, lanes: str | None) -> dict:
+def bench_fleet(
+    params, cfg, *, lanes: str | None,
+    n_streams: int = FLEET_STREAMS,
+    n_workers: int = FLEET_WORKERS,
+    n_windows: int = FLEET_WINDOWS,
+    state_dir: str | None = None,
+    fsync: str = "interval",
+    checkpoint_interval: int = 1,
+) -> dict:
     """One fleet leg (sequential or lane-parallel) over the same delivery
     schedule: every stream gets a full multi-window scene up front, then
-    rounds drain it one window per stream per beat."""
+    rounds drain it one window per stream per beat.  With ``state_dir``
+    the leg runs durable (checkpoints + WAL per the fsync policy), which
+    is what the durability-overhead rows measure."""
     from repro.serving.quantized_params import quantize_params
     from repro.serving.supervisor import FleetSupervisor
 
-    rng = np.random.default_rng(FLEET_STREAMS)
+    rng = np.random.default_rng(n_streams)
+    durable_kw = (
+        dict(state_dir=state_dir, fsync=fsync,
+             checkpoint_interval=checkpoint_interval)
+        if state_dir is not None else {}
+    )
     sup = FleetSupervisor(
         quantize_params(params, cfg, mode="int8"), cfg,
-        n_streams=FLEET_STREAMS,
-        n_workers=FLEET_WORKERS,
+        n_streams=n_streams,
+        n_workers=n_workers,
         lanes=lanes,
         feature_kind=FEATURE,
         batch_slots=BATCH_SLOTS,
         sanitize=SanitizePolicy(),
+        **durable_kw,
     )
     audio = rng.standard_normal(
-        (FLEET_STREAMS, FLEET_WINDOWS * features.N_SAMPLES)
+        (n_streams, n_windows * features.N_SAMPLES)
     ).astype(np.float32)
 
     # Warmup: one window through every stream so each worker's jit cache is
     # hot (shapes are shared process-wide, but the first leg pays the trace).
-    for s in range(FLEET_STREAMS):
+    for s in range(n_streams):
         sup.push(s, audio[s, : features.N_SAMPLES])
     sup.drain()
 
     round_s: list[float] = []
     n_win = 0
     t0 = time.perf_counter()
-    for s in range(FLEET_STREAMS):
+    for s in range(n_streams):
         sup.push(s, audio[s, features.N_SAMPLES:])
     while True:
         r0 = time.perf_counter()
@@ -535,6 +570,54 @@ def main():
                 host_cpus=n_cpus,
                 **({"lanes_vs_seq": round(ratio, 3)} if leg == "lanes" else {}),
             )
+
+    # Durability-overhead rows: the fleet leg re-run with state-dir
+    # checkpoints + chunk WAL across the fsync x checkpoint-interval grid,
+    # against an in-memory baseline benched in the same process (so the
+    # ratio cancels the interpret-mode noise floor).  SMOKE runs one small
+    # cell so the CI leg still exercises the durable path end to end.
+    if _smoke():
+        durable_grid = (("interval", 1),)  # the supervisor defaults
+        durable_size = dict(
+            n_streams=DURABLE_SMOKE_STREAMS,
+            n_workers=DURABLE_SMOKE_WORKERS,
+            n_windows=DURABLE_SMOKE_WINDOWS,
+        )
+    else:
+        durable_grid = DURABLE_GRID
+        durable_size = {}
+    base = bench_fleet(params, cfg, lanes=None, **durable_size)
+    for fsync, ck in durable_grid:
+        state_dir = tempfile.mkdtemp(prefix="bench-durable-")
+        try:
+            r = bench_fleet(
+                params, cfg, lanes=None, state_dir=state_dir,
+                fsync=fsync, checkpoint_interval=ck, **durable_size,
+            )
+        finally:
+            shutil.rmtree(state_dir, ignore_errors=True)
+        ratio = r["us_per_window"] / base["us_per_window"]
+        row(
+            f"serving/fleet_durable_{fsync}_ck{ck}",
+            f"{r['us_per_window']:.0f}",
+            f"interpret-mode; durable fleet (state-dir checkpoints + chunk "
+            f"WAL), fsync={fsync}, checkpoint every {ck} round(s); "
+            f"{r['windows_per_s']:.1f} windows/s aggregate; {ratio:.2f}x "
+            f"the in-memory fleet benched this run; {format_percentiles(r)} "
+            f"over {r['rounds']} rounds; cold restart from these artifacts "
+            f"is bitwise-conformant (tests/test_durability.py); zcr "
+            f"features, small detector",
+            windows_per_s=round(r["windows_per_s"], 2),
+            n_streams=durable_size.get("n_streams", FLEET_STREAMS),
+            n_workers=durable_size.get("n_workers", FLEET_WORKERS),
+            fsync=fsync,
+            checkpoint_interval=ck,
+            durable_vs_plain=round(ratio, 3),
+            round_p50_ms=r["round_p50_ms"],
+            round_p95_ms=r["round_p95_ms"],
+            round_p99_ms=r["round_p99_ms"],
+            host_devices=jax.device_count(),
+        )
 
     # Fleet-scale bursty-arrival rows (skipped under SMOKE: ~2k windows of
     # interpret-mode forward each).  Acceptance cares about the latency

@@ -19,6 +19,14 @@ pip install -q -r requirements-dev.txt 2>/dev/null \
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+# All throwaway artifacts (bench JSON, fault plan, crash-restart state dir)
+# are created up front and reaped by one EXIT trap, so no failure path —
+# a red perf gate, a hung smoke, a mid-script ^C — leaks a /tmp file.
+BENCH_FRESH="$(mktemp /tmp/ci_bench_fresh.XXXXXX.json)"
+FAULT_PLAN="$(mktemp /tmp/ci_fault_plan.XXXXXX.json)"
+STATE_DIR="$(mktemp -d /tmp/ci_state_dir.XXXXXX)"
+trap 'rm -rf "$BENCH_FRESH" "$FAULT_PLAN" "$STATE_DIR"' EXIT
+
 MARK=(-m "not slow")
 COV=()
 case "${1:-}" in
@@ -54,12 +62,10 @@ timeout --signal=INT 300 python -X faulthandler -m pytest -x -q \
 # jax-vs-numpy — ratios, because absolute µs swing ~±30% in the container)
 # are gated against the committed BENCH_kernels.json.  --require makes the
 # gate bite on a bench that silently drops a row.
-BENCH_FRESH="$(mktemp /tmp/ci_bench_fresh.XXXXXX.json)"
 SMOKE=1 BENCH_OUT="$BENCH_FRESH" python -m benchmarks.bench_kernels
 python scripts/perf_gate.py --fresh "$BENCH_FRESH" \
   --require 'kernels/conv_layer_fused_*' \
   --require 'kernels/frontend_jax_*'
-rm -f "$BENCH_FRESH"
 SMOKE=1 python -m benchmarks.bench_serving
 
 # Sharded-driver smoke: the --shards path boots 2 simulated devices and
@@ -86,8 +92,6 @@ timeout --signal=INT 300 python -m repro.launch.monitor --seconds 2 \
 # Fault-injection demo smoke: a seeded plan (crashes, stalls, kills, chunk
 # faults) through the fleet supervisor; the driver must survive every
 # incident and print the incident log (random weights: plumbing only).
-FAULT_PLAN="$(mktemp /tmp/ci_fault_plan.XXXXXX.json)"
-trap 'rm -f "$FAULT_PLAN"' EXIT
 python -m repro.serving.faults --seed 7 --streams 3 --workers 2 \
   --rounds 12 --out "$FAULT_PLAN"
 timeout --signal=INT 300 python -m repro.launch.monitor --seconds 2 \
@@ -106,3 +110,42 @@ timeout --signal=INT 300 python -X faulthandler -m repro.launch.monitor \
 # reassignment must hold when every worker steps on its own thread.
 timeout --signal=INT 300 python -X faulthandler -m repro.launch.monitor \
   --seconds 2 --workers 2 --lanes threads --faults "$FAULT_PLAN" --random
+
+# Crash-restart smoke: SIGKILL a durable (--state-dir) fleet mid-run, then
+# restart from the same state dir with identical arguments — the driver
+# must print the resume line and replay at least one WAL chunk.  The kill
+# can (rarely) land in the instant after a checkpoint reset when the WAL
+# is empty; that leg is retried, the resume line itself is not.
+crash_restart_smoke() {
+  local attempt pid log
+  for attempt in 1 2 3; do
+    rm -rf "$STATE_DIR"
+    # Background the BARE python command: $! must be the python pid itself.
+    # A compound command here would background a subshell, and the SIGKILL
+    # would hit the subshell while the real process kept running.
+    python -m repro.launch.monitor --seconds 6 --workers 2 \
+      --state-dir "$STATE_DIR" --random >/dev/null 2>&1 &
+    pid=$!
+    for _ in $(seq 1 100); do  # wait for the first published checkpoint
+      compgen -G "$STATE_DIR/fleet/ckpt-*.bin" >/dev/null && break
+      sleep 0.1
+    done
+    sleep 0.3  # let a few more rounds commit, then kill mid-scene
+    kill -9 "$pid" 2>/dev/null || true
+    wait "$pid" 2>/dev/null || true
+    log="$(timeout --signal=INT 300 python -X faulthandler \
+      -m repro.launch.monitor --seconds 6 --workers 2 \
+      --state-dir "$STATE_DIR" --random)"
+    echo "$log" | grep -E "monitor: resumed from state dir at round [1-9]" \
+      || { echo "ci: crash-restart smoke: no resume line" >&2; return 1; }
+    if echo "$log" | grep -qE "replayed [1-9][0-9]* chunk"; then
+      echo "ci: crash-restart smoke OK (attempt $attempt)"
+      return 0
+    fi
+    echo "ci: crash-restart smoke: WAL empty at the kill instant" \
+      "(attempt $attempt); retrying"
+  done
+  echo "ci: crash-restart smoke: no WAL replay in 3 attempts" >&2
+  return 1
+}
+crash_restart_smoke

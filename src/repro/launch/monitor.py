@@ -125,6 +125,18 @@ def main(argv=None):
                          "the fleet (spawn/retire workers, retune admission "
                          "budgets) against a default target; implies "
                          "--workers 2 unless given")
+    ap.add_argument("--state-dir", default=None, metavar="DIR",
+                    help="durable crash-safe fleet state: per-worker "
+                         "checkpoints + write-ahead chunk journals under "
+                         "DIR; rerun with the same DIR (and seed) after a "
+                         "SIGKILL to resume bitwise where the fleet left "
+                         "off; implies --workers 2 unless given")
+    ap.add_argument("--fsync", choices=("always", "interval", "never"),
+                    default="interval",
+                    help="WAL fsync policy with --state-dir")
+    ap.add_argument("--checkpoint-interval", type=int, default=1, metavar="R",
+                    help="checkpoint every R rounds with --state-dir (R>1 "
+                         "lowers overhead; 1 is the exact-restart setting)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--random", action="store_true",
                     help="random-init weights (plumbing smoke, no real detections)")
@@ -186,6 +198,7 @@ def main(argv=None):
         or args.faults is not None
         or args.lanes is not None
         or args.autoscale
+        or args.state_dir is not None
     )
     if fleet:
         from repro.serving.engine import SanitizePolicy
@@ -207,13 +220,12 @@ def main(argv=None):
             feature_kind=args.feature if args.device_features else None,
         )
         n_workers = args.workers if args.workers is not None else 2
-        engine = FleetSupervisor(
-            qp, cfg,
-            n_streams=args.streams,
-            n_workers=n_workers,
+        sup_kw = dict(
             lanes=args.lanes,
             faults=plan,
             clock=FaultClock() if plan is not None else None,
+            fsync=args.fsync,
+            checkpoint_interval=args.checkpoint_interval,
             sanitize=SanitizePolicy(),
             feature_kind=args.feature,
             on_device_features=args.device_features,
@@ -222,11 +234,33 @@ def main(argv=None):
             adaptive_slots=args.adaptive_slots,
             admission=admission,
         )
+        engine = None
+        if args.state_dir is not None:
+            engine = FleetSupervisor.restore_from_dir(
+                qp, cfg, state_dir=args.state_dir, **sup_kw
+            )
+        if engine is not None:
+            if engine.n_streams != args.streams:
+                raise SystemExit(
+                    f"monitor: --streams {args.streams} does not match the "
+                    f"state dir ({engine.n_streams} stream(s)); rerun with "
+                    f"the original arguments or a fresh --state-dir"
+                )
+            print(f"monitor: resumed from state dir at round {engine.round}, "
+                  f"replayed {engine.replayed_chunks} chunk(s)")
+        else:
+            engine = FleetSupervisor(
+                qp, cfg,
+                n_streams=args.streams,
+                n_workers=n_workers,
+                state_dir=args.state_dir,
+                **sup_kw,
+            )
         lane_note = (
             "" if args.lanes is None else f", {args.lanes} execution lanes"
         )
-        print(f"monitor: fleet supervisor, {n_workers} worker(s) over "
-              f"{args.streams} stream(s){lane_note}")
+        print(f"monitor: fleet supervisor, {engine.n_live_workers} worker(s) "
+              f"over {args.streams} stream(s){lane_note}")
     else:
         engine = MonitorEngine(
             params, cfg,
@@ -268,10 +302,31 @@ def main(argv=None):
 
     rng = np.random.default_rng(args.seed + 1)
     scenes, truths = zip(*(synth_scene(args.duration, rng) for _ in range(args.streams)))
+
+    # Real-time-ish delivery: uneven chunks, one engine round per outer
+    # tick.  The whole schedule is precomputed (one chunk-size draw per
+    # stream per round, finished streams included — the exact rng draw
+    # order of the live loop) so that a --state-dir resume can regenerate
+    # the identical delivery plan and skip what the restored fleet already
+    # embeds: per-stream chunks below the ``pushed_chunks`` delivery
+    # cursor, and rounds below the restored round counter.
+    schedule = []
     cursors = [0] * args.streams
+    while any(c < len(s) for c, s in zip(cursors, scenes)):
+        round_pushes = []
+        for s in range(args.streams):
+            chunk = int(rng.uniform(0.3, 1.7) * features.N_SAMPLES)
+            if cursors[s] < len(scenes[s]):
+                round_pushes.append((s, cursors[s], cursors[s] + chunk))
+                cursors[s] += chunk
+        schedule.append(round_pushes)
+    done = np.asarray(
+        getattr(engine, "pushed_chunks", np.zeros(args.streams, np.int64))
+    ).copy()
+    skip_rounds = int(getattr(engine, "round", 0))
+    ordinals = [0] * args.streams
 
     t0 = time.perf_counter()
-    # Real-time-ish delivery: uneven chunks, one engine round per outer tick.
     def show(scored):
         for ws in scored:
             flag = "TRACK" if ws.active else ""
@@ -280,12 +335,13 @@ def main(argv=None):
                 f"p={ws.p_uav:.2f} ema={ws.smoothed:.2f} {flag}"
             )
 
-    while any(c < len(s) for c, s in zip(cursors, scenes)):
-        for s in range(args.streams):
-            chunk = int(rng.uniform(0.3, 1.7) * features.N_SAMPLES)
-            if cursors[s] < len(scenes[s]):
-                engine.push(s, scenes[s][cursors[s] : cursors[s] + chunk])
-                cursors[s] += chunk
+    for r, round_pushes in enumerate(schedule):
+        for s, lo, hi in round_pushes:
+            if ordinals[s] >= done[s]:
+                engine.push(s, scenes[s][lo:hi])
+            ordinals[s] += 1
+        if r < skip_rounds:
+            continue  # this round's windows were scored before the restart
         t_round = time.perf_counter()
         show(engine.step())
         if controller is not None:

@@ -826,3 +826,17 @@ class MonitorEngine:
         ]
         # ready counts are derived state: recompute from the restored rings
         self._ready_counts = np.array([r.ready for r in self._rings], np.int64)
+
+    def snapshot_bytes(self) -> bytes:
+        """:meth:`snapshot` serialised through the exact on-disk codec
+        (:func:`repro.serving.durability.dumps_state`): dtypes, shapes and
+        scalar counters survive the byte round-trip bit-for-bit."""
+        from repro.serving.durability import dumps_state
+
+        return dumps_state(self.snapshot())
+
+    def restore_bytes(self, data: bytes) -> None:
+        """Inverse of :meth:`snapshot_bytes`."""
+        from repro.serving.durability import loads_state
+
+        self.restore(loads_state(data))

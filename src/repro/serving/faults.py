@@ -48,16 +48,44 @@ Fault kinds and their contracts:
     The supervisor rebuilds from the baked artifact + last-good snapshot +
     journal.  Lossless.
 
+Disk faults (``--state-dir`` durability, :mod:`repro.serving.durability`)
+enter through the injectable filesystem seam — :class:`FaultyFilesystem`
+wraps the production ``LocalFilesystem`` and consults the plan on every
+``write``/``fsync`` op.  For these kinds the :class:`Fault` ``round`` field
+is the *0-based filesystem operation index* (write ops for the write
+kinds, fsync ops for ``slow_fsync``), not an ingest round: disk activity
+is not round-synchronous, and an op counter is the deterministic clock the
+seam actually has.
+
+``torn_write``
+    Only a prefix of the buffer reaches the file, then the write errors —
+    a crash mid-write.  ``magnitude`` = surviving fraction (default 0.5).
+    WAL replay must truncate the torn tail, never raise.
+``bit_flip``
+    One bit of the buffer is flipped *silently* (``magnitude`` = bit
+    index).  The CRC-32 frame check must catch it on read-back.
+``enospc``
+    The write fails upfront with ``OSError(ENOSPC)`` (disk full).  The
+    supervisor counts the durability degradation and keeps serving.
+``slow_fsync``
+    The fsync blocks ``magnitude`` seconds (advanced on the injectable
+    clock when one is provided) — a saturated device.  Visible only as
+    latency.
+
 ``python -m repro.serving.faults --seed 7 --streams 8 --workers 2
 --rounds 20 --out plan.json`` writes a plan for the ``launch/monitor
---faults`` demo.
+--faults`` demo; ``--kinds`` restricts (or extends, e.g. to the disk
+kinds) the generated mix and rejects unknown kind names with the full
+known list in the error.
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
+import errno
 import json
 import threading
+import time
 
 import numpy as np
 
@@ -65,7 +93,10 @@ import numpy as np
 CHUNK_KINDS = ("drop_chunk", "jitter_chunk", "corrupt_chunk")
 #: worker faults target one worker's scoring round
 WORKER_KINDS = ("raise_forward", "stall_forward", "kill_worker")
-KINDS = CHUNK_KINDS + WORKER_KINDS
+#: disk faults target the Nth filesystem op on the durability seam
+#: (``round`` = op index; no stream/worker target)
+DISK_KINDS = ("torn_write", "bit_flip", "enospc", "slow_fsync")
+KINDS = CHUNK_KINDS + WORKER_KINDS + DISK_KINDS
 
 #: kinds that destroy data on their target stream — everything else must be
 #: bitwise invisible in the output
@@ -109,11 +140,13 @@ class Fault:
     """One injected fault, pinned to an ingest round and a target."""
 
     kind: str
-    round: int
+    round: int  # ingest round; for DISK_KINDS: filesystem op index
     stream: int | None = None  # chunk faults: global stream id
     worker: int | None = None  # worker faults: worker index
     # jitter: split fraction; stall: hang seconds; raise: consecutive
-    # failing dispatch attempts (0/1 = the classic single crash)
+    # failing dispatch attempts (0/1 = the classic single crash);
+    # torn_write: surviving fraction; bit_flip: bit index; slow_fsync:
+    # hang seconds
     magnitude: float = 0.0
 
     def __post_init__(self):
@@ -140,10 +173,13 @@ class FaultPlan:
         ]
         self._chunk: dict[tuple[int, int], Fault] = {}
         self._worker: dict[tuple[int, int], list[Fault]] = {}
+        self._disk: dict[int, list[Fault]] = {}
         for f in self.faults:
             if f.kind in CHUNK_KINDS:
                 # first fault wins on a (round, stream) collision
                 self._chunk.setdefault((f.round, f.stream), f)
+            elif f.kind in DISK_KINDS:
+                self._disk.setdefault(f.round, []).append(f)
             else:
                 self._worker.setdefault((f.round, f.worker), []).append(f)
 
@@ -154,6 +190,15 @@ class FaultPlan:
 
     def worker_faults(self, round_: int, worker: int) -> list[Fault]:
         return self._worker.get((round_, worker), [])
+
+    def disk_faults(self, op: int) -> list[Fault]:
+        """Disk faults pinned to the ``op``-th filesystem operation (see
+        :class:`FaultyFilesystem` for which counter each kind consults)."""
+        return self._disk.get(op, [])
+
+    @property
+    def has_disk_faults(self) -> bool:
+        return bool(self._disk)
 
     @property
     def affected_streams(self) -> set[int]:
@@ -172,9 +217,20 @@ class FaultPlan:
         n_workers: int,
         n_rounds: int,
         n_faults: int = 6,
-        kinds: tuple[str, ...] = KINDS,
+        kinds: tuple[str, ...] = CHUNK_KINDS + WORKER_KINDS,
     ) -> "FaultPlan":
-        """Seeded random plan: same arguments, same plan, every time."""
+        """Seeded random plan: same arguments, same plan, every time.
+
+        The default mix covers the transport and worker kinds (the fleet
+        chaos sweep); pass ``kinds`` explicitly — e.g. ``KINDS`` or just
+        ``DISK_KINDS`` — to include disk faults.  Unknown kind names are
+        rejected upfront with the full known list, instead of surfacing
+        later as a bare lookup error."""
+        unknown = [k for k in kinds if k not in KINDS]
+        if unknown:
+            raise ValueError(
+                f"unknown fault kind(s) {unknown} (known kinds: {list(KINDS)})"
+            )
         rng = np.random.default_rng(seed)
         faults = []
         for _ in range(n_faults):
@@ -186,6 +242,16 @@ class FaultPlan:
                     Fault(kind, rnd, stream=int(rng.integers(n_streams)),
                           magnitude=mag)
                 )
+            elif kind in DISK_KINDS:
+                # round = filesystem op index: disk activity runs several
+                # ops per ingest round, so spread over a wider range
+                op = int(rng.integers(n_rounds * 8))
+                mag = {
+                    "torn_write": float(rng.uniform(0.1, 0.9)),
+                    "bit_flip": float(rng.integers(0, 256)),
+                    "slow_fsync": float(rng.uniform(0.5, 5.0)),
+                }.get(kind, 0.0)
+                faults.append(Fault(kind, op, magnitude=mag))
             else:
                 mag = float(rng.uniform(2.0, 10.0)) if kind == "stall_forward" else 0.0
                 faults.append(
@@ -210,6 +276,86 @@ class FaultPlan:
         return cls([Fault(**f) for f in d["faults"]], seed=d.get("seed"))
 
 
+class FaultyFilesystem:
+    """Deterministic disk-fault injection on the durability seam.
+
+    Wraps a :class:`~repro.serving.durability.LocalFilesystem` (any object
+    with the same duck type) and consults the plan's :meth:`disk faults
+    <FaultPlan.disk_faults>` on every ``write`` (op counter ``writes``) and
+    every ``fsync`` (op counter ``fsyncs``).  All other operations pass
+    straight through.  The same plan replays the same faults at the same
+    ops on every run, which is what lets the durability tests assert exact
+    truncation/fallback behaviour instead of "eventually recovered".
+
+    Injected faults are recorded in :attr:`injected` as
+    ``(kind, op_index)`` pairs."""
+
+    def __init__(self, inner, plan: FaultPlan, clock=None):
+        self._inner = inner
+        self.plan = plan
+        self._clock = clock
+        self._lock = threading.Lock()
+        self.writes = 0
+        self.fsyncs = 0
+        self.injected: list[tuple[str, int]] = []
+
+    def __getattr__(self, name):
+        return getattr(self._inner, name)
+
+    def write(self, fh, data: bytes) -> int:
+        with self._lock:
+            op = self.writes
+            self.writes += 1
+        for f in self.plan.disk_faults(op):
+            if f.kind == "enospc":
+                self.injected.append((f.kind, op))
+                raise OSError(errno.ENOSPC, "injected: no space left on device")
+            if f.kind == "torn_write":
+                self.injected.append((f.kind, op))
+                frac = f.magnitude if 0.0 < f.magnitude < 1.0 else 0.5
+                keep = max(1, int(len(data) * frac)) if data else 0
+                self._inner.write(fh, data[:keep])
+                raise InjectedFault(
+                    f"torn write: {keep}/{len(data)} byte(s) reached disk"
+                )
+            if f.kind == "bit_flip" and data:
+                # silent corruption: the write "succeeds"; only the CRC
+                # framing can catch it on read-back
+                self.injected.append((f.kind, op))
+                flipped = bytearray(data)
+                bit = int(f.magnitude) % (len(flipped) * 8)
+                flipped[bit // 8] ^= 1 << (bit % 8)
+                data = bytes(flipped)
+        return self._inner.write(fh, data)
+
+    def fsync(self, fh) -> None:
+        with self._lock:
+            op = self.fsyncs
+            self.fsyncs += 1
+        for f in self.plan.disk_faults(op):
+            if f.kind == "slow_fsync":
+                self.injected.append((f.kind, op))
+                advance = getattr(self._clock, "advance", None)
+                if advance is not None:
+                    advance(float(f.magnitude))  # deterministic test clock
+                else:
+                    # real clock: a token stall, capped so no test hangs
+                    time.sleep(min(float(f.magnitude), 0.05))
+        self._inner.fsync(fh)
+
+
+def _parse_kinds(spec: str) -> tuple[str, ...]:
+    kinds = tuple(k.strip() for k in spec.split(",") if k.strip())
+    unknown = [k for k in kinds if k not in KINDS]
+    if unknown:
+        raise argparse.ArgumentTypeError(
+            f"unknown fault kind(s) {unknown} (known kinds: {list(KINDS)})"
+        )
+    if not kinds:
+        raise argparse.ArgumentTypeError("--kinds needs at least one kind")
+    return kinds
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         description="Write a seeded fault plan (JSON) for the chaos demo."
@@ -219,17 +365,27 @@ def main(argv=None):
     ap.add_argument("--workers", type=int, default=2)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--faults", type=int, default=6)
+    ap.add_argument("--kinds", type=_parse_kinds,
+                    default=CHUNK_KINDS + WORKER_KINDS,
+                    help="comma-separated fault kinds to draw from "
+                         f"(known: {','.join(KINDS)}; default excludes the "
+                         "disk kinds — add them for --state-dir runs)")
     ap.add_argument("--out", default="fault_plan.json")
     args = ap.parse_args(argv)
     plan = FaultPlan.generate(
         args.seed, n_streams=args.streams, n_workers=args.workers,
-        n_rounds=args.rounds, n_faults=args.faults,
+        n_rounds=args.rounds, n_faults=args.faults, kinds=args.kinds,
     )
     with open(args.out, "w") as fh:
         fh.write(plan.to_json())
     print(f"wrote {len(plan.faults)} fault(s) to {args.out}")
     for f in plan.faults:
-        target = f"stream {f.stream}" if f.stream is not None else f"worker {f.worker}"
+        if f.stream is not None:
+            target = f"stream {f.stream}"
+        elif f.worker is not None:
+            target = f"worker {f.worker}"
+        else:
+            target = "fs op"  # disk fault: round IS the op index
         print(f"  round {f.round:3d}  {f.kind:14s}  {target}")
 
 

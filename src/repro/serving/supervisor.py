@@ -43,6 +43,20 @@ bitwise standard, not a tolerance:
   worker rebuilt for the combined stream set.  The migrated streams keep
   their exact EMA trajectories and window indices, so even a permanently
   dead worker costs zero samples and zero numeric drift;
+* **durability** — with ``state_dir`` the same ``last_good`` + journal
+  machinery is mirrored to disk (:mod:`repro.serving.durability`): each
+  worker's snapshots go to a versioned CRC-framed checkpoint store, every
+  delivered chunk is appended to a per-worker write-ahead journal *before*
+  it reaches the engine, and a fleet meta-checkpoint — always written last,
+  always the restore authority — pins topology, counters, admission state
+  and per-worker checkpoint versions.  :meth:`restore_from_dir` rebuilds
+  the fleet after a SIGKILL / power loss from artifact + newest valid meta
+  + pinned checkpoints + WAL replay (torn tails truncated, never raised);
+  the driver then re-delivers each stream from the restored
+  ``pushed_chunks`` cursor and the resumed run is bitwise identical to an
+  uninterrupted one (``tests/test_durability.py`` pins this cold-restart
+  contract; disk faults are injected through the
+  :class:`~repro.serving.faults.FaultyFilesystem` seam);
 * **elasticity** — the same snapshot/splice machinery powers deliberate
   resizing for the SLO loop (:mod:`repro.serving.controller`):
   :meth:`spawn_worker` splits the most-loaded worker's streams into a new
@@ -62,6 +76,7 @@ unaffected streams are bitwise identical to a fault-free run.
 from __future__ import annotations
 
 import dataclasses
+import os
 import queue
 import threading
 import time
@@ -70,8 +85,20 @@ import numpy as np
 
 from repro.models.cnn1d import CNNConfig
 from repro.serving.batching import AdmissionPolicy, IngestQueue
+from repro.serving.durability import (
+    WAL_DROPPED,
+    WAL_FAULTED,
+    CheckpointStore,
+    ChunkWAL,
+    LocalFilesystem,
+)
 from repro.serving.engine import MonitorEngine, WindowScore
-from repro.serving.faults import FaultPlan, InjectedFault, StalledForward
+from repro.serving.faults import (
+    FaultPlan,
+    FaultyFilesystem,
+    InjectedFault,
+    StalledForward,
+)
 from repro.serving.quantized_params import QuantizedParams
 from repro.serving.tracker import TrackEvent
 
@@ -87,12 +114,21 @@ _SCALAR_COUNTERS = (
 class _Worker:
     """Bookkeeping for one engine in the pool (not part of the public API)."""
 
-    def __init__(self, idx: int, engine: MonitorEngine, streams: list[int]):
+    def __init__(self, idx: int, engine: MonitorEngine | None,
+                 streams: list[int]):
         self.idx = idx
         self.engine: MonitorEngine | None = engine
         self.streams = list(streams)  # global ids; position = local stream id
-        self.last_good = engine.snapshot()  # state after the last good round
+        # state after the last good round (None only for a worker being
+        # rebuilt dead from the durable meta-checkpoint)
+        self.last_good = None if engine is None else engine.snapshot()
         self.journal: list[tuple[int, np.ndarray]] = []  # pushes since then
+        # per-global-stream delivery cursor / transport-fault count at the
+        # moment last_good was taken: a durable checkpoint of last_good must
+        # pin the same cursor, or WAL replay and driver re-delivery would
+        # double- or under-apply chunks after a cold restart
+        self.good_pushed: dict[int, int] = {int(g): 0 for g in self.streams}
+        self.good_faulted: dict[int, int] = {int(g): 0 for g in self.streams}
         self.rebuilds = 0
         self.alive = True
         self.last_heartbeat: float | None = None
@@ -270,7 +306,23 @@ class FleetSupervisor:
         (e.g. :class:`~repro.serving.faults.FaultClock` in tests).
     faults:
         Optional :class:`FaultPlan` — the deterministic chaos harness.
-        ``None`` (production) makes every fault seam a no-op.
+        ``None`` (production) makes every fault seam a no-op.  A plan with
+        disk faults auto-wraps the filesystem seam in
+        :class:`~repro.serving.faults.FaultyFilesystem` (unless ``fs`` is
+        given explicitly).
+    state_dir:
+        Directory for durable crash-safe state (``None`` = in-memory
+        recovery only).  Each worker gets a versioned
+        :class:`~repro.serving.durability.CheckpointStore` of its
+        ``last_good`` snapshots plus a
+        :class:`~repro.serving.durability.ChunkWAL` of delivered chunks;
+        a ``fleet/`` meta-checkpoint pins the topology, counters and
+        checkpoint versions.  Restart via :meth:`restore_from_dir`.
+    fs / fsync / fsync_interval / checkpoint_interval / retain_checkpoints:
+        Durability knobs (with ``state_dir``): the injectable filesystem
+        seam, the WAL fsync policy (``always`` | ``interval`` | ``never``),
+        checkpoint cadence in rounds (1 = every round, the exact-restart
+        setting), and how many checkpoint versions to keep per store.
     """
 
     def __init__(
@@ -285,6 +337,12 @@ class FleetSupervisor:
         max_rebuilds: int = 3,
         clock=None,
         faults: FaultPlan | None = None,
+        state_dir: str | None = None,
+        fs=None,
+        fsync: str = "interval",
+        fsync_interval: int = 8,
+        checkpoint_interval: int = 1,
+        retain_checkpoints: int = 3,
         **engine_kw,
     ):
         if not isinstance(artifact, QuantizedParams):
@@ -346,6 +404,41 @@ class FleetSupervisor:
         # reporting them after the worker is rebuilt without the stream.
         self._final_counters: dict[int, dict[str, int]] = {}
 
+        # -- durable state (checkpoints + write-ahead chunk journals) ------
+        # ``pushed_chunks`` is the per-global-stream delivery cursor: every
+        # driver push attempt (admitted, faulted, refused) advances it, so a
+        # restarted driver knows exactly which chunks the restored state
+        # already embeds and re-delivers only the rest.
+        if checkpoint_interval < 1:
+            raise ValueError(
+                f"checkpoint_interval must be >= 1, got {checkpoint_interval}"
+            )
+        self.state_dir = state_dir
+        self.checkpoint_interval = int(checkpoint_interval)
+        self._fsync = fsync
+        self._fsync_interval = int(fsync_interval)
+        self._retain_checkpoints = int(retain_checkpoints)
+        self.pushed_chunks = np.zeros(n_streams, np.int64)
+        self.replayed_chunks = 0  # chunks rebuilt from WAL on restore
+        self.wal_errors = 0  # WAL appends/resets lost to disk faults
+        self.ckpt_errors = 0  # checkpoint saves/loads lost to disk faults
+        self._ckpt_seq = 0  # monotonic version shared by worker+fleet ckpts
+        self._ckpt_versions: dict[int, int] = {}  # worker -> last saved ver
+        self._splice_dirty = False  # topology changed since the last persist
+        self._fs = None
+        self._fleet_store: CheckpointStore | None = None
+        self._stores: dict[int, CheckpointStore] = {}
+        self._wals: dict[int, ChunkWAL] = {}
+        if state_dir is not None:
+            f = fs if fs is not None else LocalFilesystem()
+            if fs is None and faults is not None and faults.has_disk_faults:
+                f = FaultyFilesystem(f, faults, clock=self._clock_obj)
+            self._fs = f
+            self._fleet_store = CheckpointStore(
+                os.path.join(state_dir, "fleet"), fs=f,
+                retain=self._retain_checkpoints,
+            )
+
         groups = np.array_split(np.arange(n_streams), n_workers)
         self.workers = [
             _Worker(i, self._build_engine(len(g)), [int(s) for s in g])
@@ -363,11 +456,40 @@ class FleetSupervisor:
             for w in self.workers:
                 self._lanes.ensure(w.idx)
             self._ingest = IngestQueue()
+        for w in self.workers:
+            self._attach_worker_storage(w.idx)
 
     def _build_engine(self, n_streams: int) -> MonitorEngine:
         return MonitorEngine(
             self._qp, self.cfg, n_streams=n_streams, **self._engine_kw
         )
+
+    def _attach_worker_storage(self, idx: int) -> None:
+        """Create (idempotently) the checkpoint store + WAL for one worker
+        index.  No-op without a state dir."""
+        if self.state_dir is None or idx in self._wals:
+            return
+        root = os.path.join(self.state_dir, f"worker-{idx:03d}")
+        self._stores[idx] = CheckpointStore(
+            root, fs=self._fs, retain=self._retain_checkpoints
+        )
+        self._wals[idx] = ChunkWAL(
+            os.path.join(root, "wal.log"), fs=self._fs,
+            fsync=self._fsync, fsync_interval=self._fsync_interval,
+        )
+
+    def _stamp_good(self, w: _Worker) -> None:
+        """Mark the worker's current engine state as its last good state
+        and pin the per-stream delivery cursors / fault counts that state
+        embeds (what a durable checkpoint of it must record)."""
+        w.last_good = w.engine.snapshot()
+        w.journal.clear()
+        w.good_pushed = {
+            int(g): int(self.pushed_chunks[g]) for g in w.streams
+        }
+        w.good_faulted = {
+            int(g): int(self.faulted_chunks[g]) for g in w.streams
+        }
 
     # -- ingest --------------------------------------------------------------
 
@@ -404,6 +526,7 @@ class FleetSupervisor:
         worker push.  Runs on the supervisor thread in both lane modes."""
         if stream in self.evicted or stream in self._refused:
             self.refused_chunks[stream] += 1
+            self.pushed_chunks[stream] += 1  # the cursor counts refusals too
             return 0
         if stream not in self._route:
             raise ValueError(
@@ -417,8 +540,11 @@ class FleetSupervisor:
             ):
                 self._refused.add(stream)
                 self.refused_chunks[stream] += 1
+                self.pushed_chunks[stream] += 1
                 return 0
             self._seen.add(stream)
+        seq = int(self.pushed_chunks[stream])
+        self.pushed_chunks[stream] += 1
         w_idx, local = self._route[stream]
         w = self.workers[w_idx]
         x = np.asarray(samples, np.float32).reshape(-1)
@@ -426,28 +552,56 @@ class FleetSupervisor:
         fault = (
             self.faults.chunk_fault(self.round, stream) if self.faults else None
         )
+        flags = 0
         if fault is not None:
             self.faulted_chunks[stream] += 1
+            flags = WAL_FAULTED
             if fault.kind == "drop_chunk":
-                return 0  # the transport ate it
+                # the transport ate it — a WAL marker record keeps the
+                # delivery cursor and fault counter exact across a restart
+                # even though nothing reaches the engine
+                self._journal_disk(
+                    w, stream=stream, seq=seq,
+                    flags=WAL_FAULTED | WAL_DROPPED,
+                )
+                return 0
             if fault.kind == "corrupt_chunk":
                 x = x.copy()
                 x[::7] = np.nan  # deterministic poison pattern
             elif fault.kind == "jitter_chunk" and len(x) >= 2:
-                # content-preserving re-segmentation: same samples, two pushes
+                # content-preserving re-segmentation: same samples, two
+                # pushes sharing one cursor seq; only the first record
+                # carries FAULTED so replay counts the fault once
                 cut = max(1, min(len(x) - 1, int(len(x) * fault.magnitude)))
-                return self._deliver(w, local, x[:cut]) + self._deliver(
-                    w, local, x[cut:]
-                )
-        return self._deliver(w, local, x)
+                return self._deliver(
+                    w, local, x[:cut], stream=stream, seq=seq, flags=flags
+                ) + self._deliver(w, local, x[cut:], stream=stream, seq=seq)
+        return self._deliver(w, local, x, stream=stream, seq=seq, flags=flags)
 
-    def _deliver(self, w: _Worker, local: int, chunk: np.ndarray) -> int:
-        # Journal BEFORE delivery: if the push itself dies mid-flight the
-        # replay still re-attempts it.  The journal stores the raw chunk
-        # (pre-sanitize); replaying through engine.push re-applies the same
-        # deterministic sanitize decisions and counters.
+    def _deliver(self, w: _Worker, local: int, chunk: np.ndarray, *,
+                 stream: int, seq: int, flags: int = 0) -> int:
+        # Journal BEFORE delivery — in memory for in-process revives, on
+        # disk for cold restarts: if the push itself dies mid-flight both
+        # replays still re-attempt it.  The journals store the raw chunk
+        # (post-transport-fault, pre-sanitize); replaying through
+        # engine.push re-applies the same deterministic sanitize decisions
+        # and counters.
         w.journal.append((local, chunk.copy()))
+        self._journal_disk(w, stream=stream, seq=seq, chunk=chunk, flags=flags)
         return w.engine.push(local, chunk)
+
+    def _journal_disk(self, w: _Worker, *, stream: int, seq: int,
+                      chunk: np.ndarray | None = None, flags: int = 0) -> None:
+        wal = self._wals.get(w.idx)
+        if wal is None:
+            return
+        try:
+            wal.append(stream=stream, seq=seq, round_=self.round,
+                       chunk=chunk, flags=flags)
+        except (OSError, InjectedFault):
+            # durability degraded (counted), never fatal: the chunk is
+            # still delivered and still in the in-memory journal
+            self.wal_errors += 1
 
     # -- scoring -------------------------------------------------------------
 
@@ -485,6 +639,7 @@ class FleetSupervisor:
                 w.retire_pending = False
                 self._reassign(w)
         self.round += 1
+        self._persist()
         return out
 
     def _step_worker(self, w: _Worker) -> list[WindowScore]:
@@ -539,8 +694,7 @@ class FleetSupervisor:
         # stream that is refused but never evicted (no event stash, stale
         # route, journal growing forever).
         evictions = w.engine.take_evictions()
-        w.last_good = w.engine.snapshot()
-        w.journal.clear()
+        self._stamp_good(w)
         w.last_heartbeat = self._now()
         # map local -> global ids BEFORE eviction renumbers w.streams
         out = [
@@ -621,8 +775,7 @@ class FleetSupervisor:
             self._route[g] = (target.idx, base + off)
         # the merged engine IS the new last-good state; pending journal
         # entries from both workers are already baked into it
-        target.last_good = engine.snapshot()
-        target.journal.clear()
+        self._stamp_good(target)
         self._incident(
             w,
             kind,
@@ -634,6 +787,7 @@ class FleetSupervisor:
         w.engine = None
         w.streams = []
         w.journal.clear()
+        self._splice_dirty = True
 
     def _evict(self, w: _Worker, locals_: list[int]):
         """Remove persistently-overflowing streams from a worker: the
@@ -670,6 +824,7 @@ class FleetSupervisor:
             w.engine = None
             w.streams = []
             w.journal.clear()
+            self._splice_dirty = True
             return
         engine = self._build_engine(len(keep))
         engine.restore(_subset_snapshot(snap, keep))
@@ -679,8 +834,8 @@ class FleetSupervisor:
             self._route[g] = (w.idx, local)
         # the projected engine IS the new last-good state; the journal was
         # cleared by the round that triggered the eviction
-        w.last_good = engine.snapshot()
-        w.journal.clear()
+        self._stamp_good(w)
+        self._splice_dirty = True
 
     def _incident(self, w: _Worker, kind: str, detail: str):
         # lock-protected: lanes report their own incidents concurrently;
@@ -690,6 +845,233 @@ class FleetSupervisor:
                 {"round": self.round, "worker": w.idx, "kind": kind,
                  "detail": detail}
             )
+
+    # -- durability (cold-restart checkpoints + WAL) ---------------------------
+
+    def _persist(self, *, force: bool = False) -> None:
+        """Publish the fleet's durable view: each live worker's last-good
+        checkpoint (snapshot + the delivery cursors it embeds), WAL resets
+        for journals those checkpoints made redundant, then the fleet
+        meta-checkpoint that pins it all together.  Runs on the supervisor
+        thread at the end of a round (every ``checkpoint_interval`` rounds,
+        or forced after a topology splice).
+
+        The meta is written *last* and is the restore authority: a crash
+        anywhere mid-persist leaves worker checkpoints the meta never
+        references (orphans, skipped on restore) or WALs the meta's cursors
+        already cover (stale prefixes, filtered on replay) — never a state
+        that restores wrong.  Disk faults are counted
+        (``ckpt_errors``/``wal_errors``), not raised: durability degrades
+        to the previous checkpoint + WAL replay + driver re-delivery, but
+        serving never stops."""
+        if self.state_dir is None:
+            return
+        if not (force or self._splice_dirty
+                or self.round % self.checkpoint_interval == 0):
+            return
+        self._ckpt_seq += 1
+        ver = self._ckpt_seq
+        for w in self.workers:
+            if not w.alive or w.last_good is None:
+                continue
+            payload = {
+                "snapshot": w.last_good,
+                "pushed": dict(w.good_pushed),
+                "faulted": dict(w.good_faulted),
+            }
+            try:
+                self._stores[w.idx].save(ver, payload)
+            except (OSError, InjectedFault):
+                self.ckpt_errors += 1
+                continue  # keep the WAL: it still covers the gap
+            self._ckpt_versions[w.idx] = ver
+            if not w.journal:
+                # empty journal -> every WAL record is baked into last_good
+                try:
+                    self._wals[w.idx].reset()
+                except (OSError, InjectedFault):
+                    self.wal_errors += 1
+        adm = self._engine_kw.get("admission")
+        meta = {
+            "round": self.round,
+            "ckpt_seq": ver,
+            "n_streams": self.n_streams,
+            "max_streams": self._max_streams,
+            "admission": None if adm is None else dataclasses.asdict(adm),
+            "workers": [
+                {"idx": w.idx, "alive": w.alive,
+                 "streams": list(map(int, w.streams)),
+                 "rebuilds": w.rebuilds}
+                for w in self.workers
+            ],
+            "versions": dict(self._ckpt_versions),
+            "seen": sorted(self._seen),
+            "refused": sorted(self._refused),
+            "evicted": sorted(self.evicted),
+            "pushed_chunks": self.pushed_chunks.copy(),
+            "faulted_chunks": self.faulted_chunks.copy(),
+            "refused_chunks": self.refused_chunks.copy(),
+            "evicted_events": {
+                g: list(v) for g, v in self._evicted_events.items()
+            },
+            "final_counters": {
+                g: dict(v) for g, v in self._final_counters.items()
+            },
+            "incidents": [dict(i) for i in self.incidents],
+        }
+        try:
+            self._fleet_store.save(ver, meta)
+        except (OSError, InjectedFault):
+            self.ckpt_errors += 1
+            return  # keep _splice_dirty: retry the full publish next round
+        self._splice_dirty = False
+        # a dead worker's journal is redundant once a meta that records the
+        # splice is on disk (its state lives in a survivor's checkpoint)
+        for idx, wal in self._wals.items():
+            w = self.workers[idx] if idx < len(self.workers) else None
+            if w is not None and not w.alive and wal.appended:
+                try:
+                    wal.reset()
+                except (OSError, InjectedFault):
+                    self.wal_errors += 1
+
+    @property
+    def wal_truncations(self) -> int:
+        """Torn/corrupt WAL tails truncated by replay across the fleet."""
+        return sum(w.truncations for w in self._wals.values())
+
+    @classmethod
+    def restore_from_dir(cls, artifact: QuantizedParams, cfg: CNNConfig, *,
+                         state_dir: str, fs=None, **kw):
+        """Rebuild a fleet from its durable on-disk state: artifact + newest
+        valid fleet meta-checkpoint + per-worker checkpoints (pinned to the
+        versions the meta references — a newer orphan is never resurrected)
+        + WAL replay, with any torn/corrupt WAL tail truncated, never
+        raised.  Returns ``None`` when the state dir holds no loadable
+        meta (caller starts a fresh fleet).
+
+        After restore, ``pushed_chunks`` is the per-stream delivery cursor:
+        the driver re-delivers each stream's chunks from that ordinal on
+        (then re-runs rounds from ``self.round``) and the resumed run is
+        bitwise identical to an uninterrupted one."""
+        probe_fs = fs if fs is not None else LocalFilesystem()
+        meta_store = CheckpointStore(
+            os.path.join(state_dir, "fleet"), fs=probe_fs
+        )
+        loaded = meta_store.load_latest()
+        if loaded is None:
+            return None
+        _, meta = loaded
+        kw.pop("n_streams", None)
+        kw.pop("n_workers", None)
+        sup = cls(artifact, cfg, n_streams=int(meta["n_streams"]),
+                  n_workers=1, state_dir=state_dir, fs=fs, **kw)
+        sup.round = int(meta["round"])
+        sup._ckpt_seq = int(meta["ckpt_seq"])
+        sup._ckpt_versions = {
+            int(k): int(v) for k, v in meta["versions"].items()
+        }
+        sup._max_streams = meta["max_streams"]
+        if meta["admission"] is not None:
+            sup._engine_kw["admission"] = AdmissionPolicy(**meta["admission"])
+        sup._seen = {int(s) for s in meta["seen"]}
+        sup._refused = {int(s) for s in meta["refused"]}
+        sup.evicted = {int(s) for s in meta["evicted"]}
+        sup.pushed_chunks = np.asarray(meta["pushed_chunks"], np.int64).copy()
+        sup.faulted_chunks = np.asarray(
+            meta["faulted_chunks"], np.int64
+        ).copy()
+        sup.refused_chunks = np.asarray(
+            meta["refused_chunks"], np.int64
+        ).copy()
+        sup._evicted_events = {
+            int(g): list(v) for g, v in meta["evicted_events"].items()
+        }
+        sup._final_counters = {
+            int(g): dict(v) for g, v in meta["final_counters"].items()
+        }
+        sup.incidents = [dict(i) for i in meta["incidents"]]
+
+        workers: list[_Worker] = []
+        sup._route = {}
+        for rec in meta["workers"]:
+            idx = int(rec["idx"])
+            if not rec["alive"]:
+                w = _Worker(idx, None, [])
+                w.alive = False
+                w.rebuilds = int(rec["rebuilds"])
+                workers.append(w)
+                continue
+            streams = [int(g) for g in rec["streams"]]
+            sup._attach_worker_storage(idx)
+            engine = sup._build_engine(len(streams))
+            w = _Worker(idx, engine, streams)
+            w.rebuilds = int(rec["rebuilds"])
+            pinned = sup._ckpt_versions.get(idx)
+            ck = (
+                sup._stores[idx].load_latest(at_or_before=pinned)
+                if pinned is not None else None
+            )
+            if ck is not None and (
+                len(ck[1]["snapshot"]["rings"]) != len(streams)
+            ):
+                ck = None  # checkpoint predates a splice the meta recorded
+            if ck is None:
+                # degraded restore: no usable checkpoint — start this
+                # worker fresh and zero its cursors so the driver
+                # re-delivers its streams from chunk 0
+                sup.ckpt_errors += 1
+                for g in streams:
+                    sup.pushed_chunks[g] = 0
+                    sup.faulted_chunks[g] = 0
+                try:
+                    sup._wals[idx].reset()
+                except (OSError, InjectedFault):
+                    sup.wal_errors += 1
+                sup._stamp_good(w)
+                sup._incident(
+                    w, "restore-degraded",
+                    "no loadable checkpoint; rebuilt fresh — the driver "
+                    "must re-deliver from chunk 0",
+                )
+            else:
+                _, payload = ck
+                engine.restore(payload["snapshot"])
+                for g, v in payload["pushed"].items():
+                    sup.pushed_chunks[int(g)] = int(v)
+                for g, v in payload["faulted"].items():
+                    sup.faulted_chunks[int(g)] = int(v)
+                sup._stamp_good(w)
+                # WAL replay: everything delivered after that checkpoint.
+                # The seq filter drops stale pre-checkpoint prefixes (a
+                # reset that failed or never ran); it compares against the
+                # checkpoint's cursor, not the advancing one, so jittered
+                # pushes sharing a seq both replay.
+                base = {g: int(sup.pushed_chunks[g]) for g in streams}
+                local_of = {g: l for l, g in enumerate(streams)}
+                for r in sup._wals[idx].replay():
+                    g = int(r.stream)
+                    if g not in local_of or r.seq < base[g]:
+                        continue
+                    if r.flags & WAL_FAULTED:
+                        sup.faulted_chunks[g] += 1
+                    if not (r.flags & WAL_DROPPED):
+                        engine.push(local_of[g], r.chunk)
+                        w.journal.append((local_of[g], r.chunk))
+                        sup.replayed_chunks += 1
+                    sup.pushed_chunks[g] = max(
+                        sup.pushed_chunks[g], r.seq + 1
+                    )
+            workers.append(w)
+        sup.workers = workers
+        for w in workers:
+            for local, g in enumerate(w.streams):
+                sup._route[g] = (w.idx, local)
+        if sup._lanes is not None:
+            for w in workers:
+                if w.alive:
+                    sup._lanes.ensure(w.idx)
+        return sup
 
     # -- elasticity (the SLO controller's actuators) --------------------------
 
@@ -713,24 +1095,29 @@ class FleetSupervisor:
         engine.restore(_subset_snapshot(snap, keep))
         donor.engine = engine
         donor.streams = [donor.streams[l] for l in keep]
-        donor.last_good = engine.snapshot()
-        donor.journal.clear()
+        self._stamp_good(donor)
         idx = len(self.workers)
         spawned_engine = self._build_engine(len(move))
         spawned_engine.restore(_subset_snapshot(snap, move, zero_scalars=True))
         spawned = _Worker(idx, spawned_engine, moved)
         spawned.last_heartbeat = self._now()
         self.workers.append(spawned)
+        self._stamp_good(spawned)
         for local, g in enumerate(donor.streams):
             self._route[g] = (donor.idx, local)
         for local, g in enumerate(moved):
             self._route[g] = (idx, local)
         if self._lanes is not None:
             self._lanes.ensure(idx)
+        self._attach_worker_storage(idx)
         self._incident(
             spawned, "spawn",
             f"streams {moved} <- worker {donor.idx} (scale-up)",
         )
+        # splices must keep the on-disk view consistent: publish the new
+        # topology now (spawn/retire run between rounds, not inside step)
+        self._splice_dirty = True
+        self._persist(force=True)
         return idx
 
     def retire_worker(self, idx: int | None = None, *,
@@ -752,6 +1139,8 @@ class FleetSupervisor:
             w, kind="retire", detail=f"{reason}: streams {streams} folded "
             f"into the survivors",
         )
+        if not w.alive:
+            self._persist(force=True)
         return not w.alive
 
     def retune_admission(self, admission: AdmissionPolicy) -> None:
@@ -766,6 +1155,9 @@ class FleetSupervisor:
         for w in self.workers:
             if w.alive:
                 w.engine.admission = worker_adm
+        # the active policy rides the fleet meta-checkpoint so a cold
+        # restart resumes with the retuned budgets, not the boot-time ones
+        self._persist(force=True)
 
     @property
     def admission(self) -> AdmissionPolicy:
@@ -877,7 +1269,8 @@ class FleetSupervisor:
             out.extend(scored)
 
     def close(self) -> None:
-        """Shut down the execution lanes (no-op for the sequential fleet).
+        """Shut down the execution lanes (no-op for the sequential fleet)
+        and publish a final durable checkpoint (no-op without a state dir).
         The supervisor remains usable afterwards only in sequential mode."""
         if self._lanes is not None:
             self._lanes.close()
@@ -888,6 +1281,13 @@ class FleetSupervisor:
                 for stream, samples in self._ingest.drain():
                     self._ingest_one(stream, samples)
                 self._ingest = None
+        if self.state_dir is not None:
+            # chunks delivered since the last step stay journaled on disk
+            # (their workers' journals are non-empty, so _persist leaves
+            # those WALs alone and replay covers them)
+            self._persist(force=True)
+            for wal in self._wals.values():
+                wal.close()
 
     def finalize(self) -> list[list[TrackEvent]]:
         """Flush still-open tracks; returns per-GLOBAL-stream event lists.

@@ -182,3 +182,39 @@ def test_bench_env_pins_before_jax_import_subprocess():
     )
     assert proc.returncode == 0, proc.stderr
     assert "BENCH_ENV_OK" in proc.stdout
+
+
+def test_bench_env_step_marker_leg_with_mocked_accel(tmp_path, monkeypatch):
+    """The TPU leg of ``bench_env.apply()`` — exercised without hardware by
+    pointing ``ACCEL_DEVICE_GLOB`` at a tmp path: the step-marker flag is
+    pinned exactly once (idempotent on re-apply), recorded in the state,
+    and absent again when the glob matches nothing."""
+    import os
+
+    from benchmarks import bench_env
+
+    (tmp_path / "accel0").touch()
+    monkeypatch.setattr(bench_env, "ACCEL_DEVICE_GLOB",
+                        str(tmp_path / "accel*"))
+    monkeypatch.setenv("XLA_FLAGS", "")
+    saved = dict(bench_env._state)
+    try:
+        state = bench_env.apply(host_devices=1)
+        assert state["step_marker"] is True
+        flags = os.environ["XLA_FLAGS"].split()
+        assert bench_env.STEP_MARKER_FLAG in flags
+        bench_env.apply(host_devices=1)  # re-apply: no duplicate flag
+        assert os.environ["XLA_FLAGS"].split().count(
+            bench_env.STEP_MARKER_FLAG
+        ) == 1
+
+        # no-hardware leg: empty glob means no marker and no flag
+        monkeypatch.setattr(bench_env, "ACCEL_DEVICE_GLOB",
+                            str(tmp_path / "nothing*"))
+        monkeypatch.setenv("XLA_FLAGS", "")
+        state = bench_env.apply(host_devices=1)
+        assert state["step_marker"] is False
+        assert bench_env.STEP_MARKER_FLAG not in os.environ["XLA_FLAGS"]
+    finally:
+        bench_env._state.clear()
+        bench_env._state.update(saved)
